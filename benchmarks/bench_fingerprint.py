@@ -1,0 +1,35 @@
+"""Paper §IV-C: fingerprinting quality table (MSE, type acc, outlier F1)."""
+
+from __future__ import annotations
+
+import time
+
+
+def run(rows):
+    from repro.core.graph_data import build_graphs, chronological_split
+    from repro.core.model import PeronaConfig, PeronaModel
+    from repro.core.preprocess import Preprocessor
+    from repro.core.trainer import evaluate, train_perona
+    from repro.fingerprint.runner import paper_acquisition
+
+    records = paper_acquisition(seed=0)
+    train_r, val_r, test_r = chronological_split(records)
+    pre = Preprocessor().fit(train_r)
+    tb, vb, teb = (build_graphs(r, pre) for r in (train_r, val_r, test_r))
+    cfg = PeronaConfig(feature_dim=pre.feature_dim,
+                       edge_dim=tb.edge.shape[-1])
+    model = PeronaModel(cfg)
+    t0 = time.time()
+    res = train_perona(model, tb, vb, epochs=100, seed=0)
+    train_us = (time.time() - t0) * 1e6
+    m = evaluate(model, res.params, teb)
+    rows.append(("fingerprint.metrics_raw", "", pre.raw_feature_count))
+    rows.append(("fingerprint.metrics_selected", "", pre.n_selected))
+    rows.append(("fingerprint.train", f"{train_us:.0f}", "paper<=100ep"))
+    rows.append(("fingerprint.test_mse", "", f"{m['mse']:.4f}"))
+    rows.append(("fingerprint.type_accuracy", "",
+                 f"{m['type_accuracy']:.4f}"))
+    rows.append(("fingerprint.f1_normal", "", f"{m['f1_normal']:.4f}"))
+    rows.append(("fingerprint.f1_outlier", "", f"{m['f1_outlier']:.4f}"))
+    rows.append(("fingerprint.weighted_accuracy", "",
+                 f"{m['weighted_accuracy']:.4f}"))

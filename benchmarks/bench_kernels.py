@@ -1,0 +1,65 @@
+"""Kernel micro-benchmarks: us/call of the jitted oracle path on CPU
+(wall-time of the Pallas kernels is only meaningful on TPU; here the
+kernels are *validated* in interpret mode — see tests/test_kernels.py —
+and the oracle timing tracks the compute the kernel replaces)."""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+
+def _time(fn, *args, iters: int = 5) -> float:
+    out = fn(*args)
+    jax.block_until_ready(out)
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / iters * 1e6
+
+
+def run(rows):
+    from repro.kernels.edge_softmax import ref as es_ref
+    from repro.kernels.flash_attention import ref as fa_ref
+    from repro.kernels.mlstm import ref as ml_ref
+    from repro.kernels.rg_lru import ref as lru_ref
+
+    ks = jax.random.split(jax.random.PRNGKey(0), 8)
+
+    B, H, S, D = 1, 8, 1024, 64
+    q = jax.random.normal(ks[0], (B, H, S, D), jnp.bfloat16)
+    k = jax.random.normal(ks[1], (B, H, S, D), jnp.bfloat16)
+    v = jax.random.normal(ks[2], (B, H, S, D), jnp.bfloat16)
+    fa = jax.jit(lambda q, k, v: fa_ref.attention(q, k, v, causal=True))
+    rows.append(("kernel.flash_attention.b1h8s1024d64",
+                 f"{_time(fa, q, k, v):.0f}", "interpret-validated"))
+
+    a = jax.random.uniform(ks[3], (4, 2048, 1024), jnp.float32, 0.5, 0.99)
+    b = jax.random.normal(ks[4], (4, 2048, 1024), jnp.float32)
+    lru = jax.jit(lambda a, b: lru_ref.linear_scan(a, b))
+    rows.append(("kernel.rg_lru.b4s2048c1024",
+                 f"{_time(lru, a, b):.0f}", "interpret-validated"))
+
+    BH, S2, hd = 8, 1024, 128
+    q2 = jax.random.normal(ks[5], (BH, S2, hd))
+    k2 = jax.random.normal(ks[6], (BH, S2, hd)) / jnp.sqrt(hd)
+    v2 = jax.random.normal(ks[7], (BH, S2, hd))
+    li = jnp.zeros((BH, S2))
+    lf = jnp.full((BH, S2), -0.05)
+    ml = jax.jit(lambda *a: ml_ref.mlstm_chunkwise(*a, chunk=64)[0])
+    rows.append(("kernel.mlstm.bh8s1024hd128",
+                 f"{_time(ml, q2, k2, v2, li, lf):.0f}",
+                 "interpret-validated"))
+
+    N, P, F = 4096, 3, 32
+    qg = jax.random.normal(ks[0], (N, F))
+    kg = jax.random.normal(ks[1], (N, P, F))
+    vg = jax.random.normal(ks[2], (N, P, F))
+    mask = jnp.ones((N, P), bool)
+    es = jax.jit(lambda *a: es_ref.edge_softmax_aggregate(*a)[0])
+    rows.append(("kernel.edge_softmax.n4096p3f32",
+                 f"{_time(es, qg, kg, vg, mask):.0f}",
+                 "interpret-validated"))

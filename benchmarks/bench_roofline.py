@@ -1,0 +1,37 @@
+"""Roofline summary from the dry-run artifacts (deliverable g)."""
+
+from __future__ import annotations
+
+import json
+import os
+from pathlib import Path
+
+ART = Path(__file__).resolve().parent.parent / "artifacts" / "dryrun"
+
+
+def run(rows):
+    if not ART.is_dir():
+        rows.append(("roofline", "", "artifacts missing; run "
+                     "python -m repro.launch.dryrun --all"))
+        return
+    cells = []
+    for f in sorted(ART.glob("*--single.json")):
+        rec = json.loads(f.read_text())
+        if rec.get("status") != "ok" or "roofline" not in rec:
+            continue
+        cells.append(rec)
+    for rec in cells:
+        r = rec["roofline"]
+        name = f"roofline.{rec['arch']}.{rec['shape']}"
+        derived = (f"bottleneck={r['bottleneck']};"
+                   f"compute={r['compute_s']:.3e}s;"
+                   f"memory={r['memory_s']:.3e}s;"
+                   f"collective={r['collective_s']:.3e}s;"
+                   f"useful_flops_ratio="
+                   f"{rec.get('useful_flops_ratio') or 0:.3f}")
+        rows.append((name, "", derived))
+    rated = [c for c in cells if c.get("useful_flops_ratio")]
+    if rated:
+        worst = min(rated, key=lambda c: c["useful_flops_ratio"])
+        rows.append(("roofline.worst_useful_ratio", "",
+                     f"{worst['arch']}.{worst['shape']}"))

@@ -1,0 +1,57 @@
+"""Paper §IV-D Fig. 5: cheapest valid cloud configuration per profiling
+run, CherryPick / Arrow with and without the Perona extension, median
+over the 18 scout workloads."""
+
+from __future__ import annotations
+
+import numpy as np
+
+
+def run(rows, n_workloads: int = 18, max_runs: int = 9):
+    from repro.core.ranking import machine_score_vector
+    from repro.tuning.arrow import Arrow
+    from repro.tuning.cherrypick import CherryPick
+    from repro.tuning.perona_weights import (PeronaAcquisitionWeighter,
+                                             fingerprint_machine_scores)
+    from repro.tuning.scout import VM_TYPES, ScoutDataset, WORKLOAD_NAMES
+
+    ds = ScoutDataset(seed=0)
+    scores = fingerprint_machine_scores(VM_TYPES, runs_per_type=20,
+                                        epochs=60)
+    weighter = PeronaAcquisitionWeighter(ds, scores)
+    low_fn = lambda wl, c: machine_score_vector(scores, c.vm_type)
+
+    methods = {
+        "cherrypick": lambda limit: CherryPick(ds, limit, seed=2,
+                                               max_runs=max_runs),
+        "cherrypick+perona": lambda limit: CherryPick(
+            ds, limit, seed=2, max_runs=max_runs,
+            acquisition_weighter=weighter),
+        "arrow": lambda limit: Arrow(ds, limit, seed=2, max_runs=max_runs),
+        "arrow+perona": lambda limit: Arrow(
+            ds, limit, seed=2, max_runs=max_runs, low_level_fn=low_fn,
+            acquisition_weighter=weighter),
+    }
+
+    curves = {m: [] for m in methods}
+    search_costs = {m: [] for m in methods}
+    for wl in WORKLOAD_NAMES[:n_workloads]:
+        rts = [ds.runtime_s(wl, c) for c in ds.configs]
+        limit = float(np.percentile(rts, 40))
+        for name, mk in methods.items():
+            trace = mk(limit).search(wl)
+            curve = trace.best_valid_cost
+            curve = curve + [curve[-1]] * (max_runs - len(curve))
+            curves[name].append(curve)
+            search_costs[name].append(trace.search_cost)
+
+    for name in methods:
+        arr = np.asarray(curves[name])
+        for run_idx in (2, 4, 8):
+            col = arr[:, run_idx]
+            valid = col[np.isfinite(col)]
+            med = float(np.median(valid)) if len(valid) else float("inf")
+            rows.append((f"fig5.{name}.run{run_idx + 1}", "",
+                         f"{med:.4f} (n_valid={len(valid)})"))
+        rows.append((f"fig5.{name}.search_cost", "",
+                     f"{np.median(search_costs[name]):.3f}"))

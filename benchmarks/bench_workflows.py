@@ -1,0 +1,28 @@
+"""Paper §IV-E: Lotaru Table III analogue + Tarema node grouping."""
+
+from __future__ import annotations
+
+
+def run(rows):
+    from repro.tuning import lotaru, tarema
+    from repro.tuning.perona_weights import (calibrate_scores,
+                                             fingerprint_machine_scores)
+
+    gcp = ("e2-medium", "n1-standard-4", "n2-standard-4", "c2-standard-4")
+    scores, proxies = fingerprint_machine_scores(
+        gcp, runs_per_type=10, epochs=40, return_calibration=True)
+    cal = calibrate_scores(scores, proxies)
+    tab = lotaru.evaluate_predictors(cal)
+    for method in ("naive", "online_m", "online_p", "lotaru", "perona"):
+        v = tab[method]
+        rows.append((f"tableIII.{method}.median", "", f"{v['median']:.4f}"))
+        rows.append((f"tableIII.{method}.p90", "", f"{v['p90']:.4f}"))
+        rows.append((f"tableIII.{method}.p95", "", f"{v['p95']:.4f}"))
+
+    machines = {"a": "n1-standard-4", "b": "n1-standard-4",
+                "c": "n2-standard-4", "d": "c2-standard-4",
+                "e": "e2-medium"}
+    same = tarema.same_grouping(
+        tarema.groups_from_microbenchmarks(machines),
+        tarema.groups_from_perona(machines, cal))
+    rows.append(("tarema.same_groups", "", str(same)))

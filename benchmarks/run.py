@@ -1,0 +1,54 @@
+"""Benchmark harness: one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV. Modules:
+  bench_fingerprint — paper §IV-C quality table
+  bench_tuning      — paper §IV-D Fig. 5 (CherryPick/Arrow +- Perona)
+  bench_workflows   — paper §IV-E Table III (Lotaru) + Tarema groups
+  bench_kernels     — kernel-path microbenchmarks
+  bench_roofline    — dry-run roofline summary (deliverable g)
+
+Usage: PYTHONPATH=src python -m benchmarks.run [--only <module-substr>]
+"""
+
+import argparse
+import sys
+import time
+import traceback
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default="")
+    ap.add_argument("--quick", action="store_true",
+                    help="reduced workload counts for smoke usage")
+    args = ap.parse_args()
+
+    from benchmarks import (bench_fingerprint, bench_kernels,
+                            bench_roofline, bench_tuning, bench_workflows)
+
+    modules = [
+        ("fingerprint", lambda rows: bench_fingerprint.run(rows)),
+        ("tuning", lambda rows: bench_tuning.run(
+            rows, n_workloads=(6 if args.quick else 18))),
+        ("workflows", lambda rows: bench_workflows.run(rows)),
+        ("kernels", lambda rows: bench_kernels.run(rows)),
+        ("roofline", lambda rows: bench_roofline.run(rows)),
+    ]
+
+    rows = [("name", "us_per_call", "derived")]
+    for name, fn in modules:
+        if args.only and args.only not in name:
+            continue
+        t0 = time.time()
+        try:
+            fn(rows)
+            rows.append((f"{name}.wall_s", "", f"{time.time() - t0:.1f}"))
+        except Exception as e:  # noqa: BLE001
+            traceback.print_exc()
+            rows.append((f"{name}.ERROR", "", repr(e)))
+    for r in rows:
+        print(",".join(str(x) for x in r))
+
+
+if __name__ == "__main__":
+    main()

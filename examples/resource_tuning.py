@@ -1,0 +1,57 @@
+"""Paper §IV-D use case: iterative cloud-configuration optimization with
+Perona-weighted acquisition (CherryPick / Arrow on the scout-like
+dataset).
+
+    PYTHONPATH=src python examples/resource_tuning.py
+"""
+
+import numpy as np
+
+from repro.core.ranking import machine_score_vector
+from repro.tuning.arrow import Arrow
+from repro.tuning.cherrypick import CherryPick
+from repro.tuning.perona_weights import (PeronaAcquisitionWeighter,
+                                         fingerprint_machine_scores)
+from repro.tuning.scout import VM_TYPES, ScoutDataset, WORKLOAD_NAMES
+
+
+def main():
+    ds = ScoutDataset(seed=0)
+    print(f"scout-like dataset: {len(ds.workloads)} workloads x "
+          f"{len(ds.configs)} configs = "
+          f"{len(ds.workloads) * len(ds.configs)} runs")
+
+    print("fingerprinting the 9 AWS machine types (540 executions)...")
+    scores = fingerprint_machine_scores(VM_TYPES, runs_per_type=10,
+                                        epochs=40)
+    weighter = PeronaAcquisitionWeighter(ds, scores)
+    low_fn = lambda wl, c: machine_score_vector(scores, c.vm_type)
+
+    for wl in WORKLOAD_NAMES[:4]:
+        rts = [ds.runtime_s(wl, c) for c in ds.configs]
+        limit = float(np.percentile(rts, 40))
+        rows = {}
+        rows["cherrypick"] = CherryPick(ds, limit, seed=2).search(wl)
+        rows["cherrypick+perona"] = CherryPick(
+            ds, limit, seed=2, acquisition_weighter=weighter).search(wl)
+        rows["arrow"] = Arrow(ds, limit, seed=2).search(wl)
+        rows["arrow+perona"] = Arrow(ds, limit, seed=2,
+                                     low_level_fn=low_fn,
+                                     acquisition_weighter=weighter
+                                     ).search(wl)
+        print(f"\n{wl} (runtime limit {limit:.0f}s):")
+        for name, tr in rows.items():
+            best = tr.best_valid_cost[-1]
+            cfg = min(
+                ((c, co) for c, co, r in
+                 zip(tr.evaluated, tr.costs, tr.runtimes) if r <= limit),
+                key=lambda x: x[1], default=(None, float("inf")))[0]
+            print(f"  {name:20s} best=${best:.4f} "
+                  f"({cfg.vm_type} x{cfg.count} | "
+                  f"search ${tr.search_cost:.2f}, "
+                  f"{len(tr.evaluated)} runs)" if cfg else
+                  f"  {name:20s} no valid config found")
+
+
+if __name__ == "__main__":
+    main()

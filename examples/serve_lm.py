@@ -1,0 +1,17 @@
+"""Batched serving example: slot-based continuous batching.
+
+    PYTHONPATH=src python examples/serve_lm.py
+
+Serves 12 requests through 4 slots of a reduced smollm-135m; the same
+serve path lowers onto the production meshes for the decode_32k /
+long_500k dry-run cells.
+"""
+
+import sys
+
+from repro.launch import serve as serve_driver
+
+if __name__ == "__main__":
+    sys.argv = [sys.argv[0], "--arch", "smollm-135m", "--requests", "12",
+                "--max-new", "16", "--slots", "4"]
+    serve_driver.main()

@@ -1,0 +1,25 @@
+"""End-to-end driver: Perona-aware fault-tolerant LM training.
+
+Quick demo (reduced model, CPU-friendly):
+
+    PYTHONPATH=src python examples/train_lm.py
+
+Full assigned config (what the dry-run proves on the production mesh;
+needs accelerators for reasonable wall time):
+
+    PYTHONPATH=src python -m repro.launch.train --arch smollm-135m \
+        --scale full --steps 300 --batch 32 --seq 2048
+
+This wraps repro.launch.train: cluster fingerprinting + ranking, an
+injected host failure at step 30, checkpoint/restart and exclusion.
+"""
+
+import sys
+
+from repro.launch import train as train_driver
+
+if __name__ == "__main__":
+    sys.argv = [sys.argv[0], "--arch", "smollm-135m", "--steps", "60",
+                "--batch", "4", "--seq", "128", "--fail-at", "30",
+                "--checkpoint-every", "10"]
+    train_driver.main()

@@ -1,0 +1,5 @@
+"""Checkpointing: atomic async saves, restart, elastic resharding."""
+
+from repro.checkpointing.manager import CheckpointManager
+
+__all__ = ["CheckpointManager"]

@@ -1,0 +1,135 @@
+"""Checkpoint manager: atomic, optionally async, keep-last-K, restart.
+
+Format: one ``step_<n>.npz`` per checkpoint holding every pytree leaf
+under its slash-joined path plus a treedef-independent manifest; a
+``LATEST`` file is swapped in atomically after a successful write, so a
+crash mid-save never corrupts the restore point (fault-tolerance
+invariant exercised by tests/test_checkpoint.py).
+
+Elastic restore: leaves are saved as full (unsharded) host arrays; on
+restore they are device_put with the *current* mesh's shardings, so the
+cluster size may change between runs (``reshard``).
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import queue
+import threading
+from pathlib import Path
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.common.tree import tree_flatten_with_paths
+
+
+class CheckpointManager:
+    def __init__(self, directory, keep_last: int = 3, async_save: bool = True):
+        self.dir = Path(directory)
+        self.dir.mkdir(parents=True, exist_ok=True)
+        self.keep_last = keep_last
+        self.async_save = async_save
+        self._queue: "queue.Queue" = queue.Queue()
+        self._worker: Optional[threading.Thread] = None
+        self._error: Optional[BaseException] = None
+
+    # ------------------------------------------------------------------ save
+    def save(self, step: int, tree: Any, extra: Optional[Dict] = None):
+        """Snapshot to host memory synchronously; write async if enabled."""
+        flat = tree_flatten_with_paths(tree)
+        host = {path: np.asarray(leaf) for path, leaf in flat}
+        payload = (step, host, dict(extra or {}))
+        if self.async_save:
+            self._ensure_worker()
+            self._queue.put(payload)
+        else:
+            self._write(*payload)
+
+    def _ensure_worker(self):
+        if self._worker is None or not self._worker.is_alive():
+            self._worker = threading.Thread(target=self._drain, daemon=True)
+            self._worker.start()
+
+    def _drain(self):
+        while True:
+            item = self._queue.get()
+            if item is None:
+                return
+            try:
+                self._write(*item)
+            except BaseException as e:  # noqa: BLE001
+                self._error = e
+            finally:
+                self._queue.task_done()
+
+    def _write(self, step: int, host: Dict[str, np.ndarray], extra: Dict):
+        tmp = self.dir / f".tmp_step_{step}.npz"
+        final = self.dir / f"step_{step}.npz"
+        np.savez(tmp, **host)
+        os.replace(tmp, final)
+        meta = {"step": step, "extra": extra}
+        mtmp = self.dir / f".tmp_meta_{step}.json"
+        mtmp.write_text(json.dumps(meta))
+        os.replace(mtmp, self.dir / f"meta_{step}.json")
+        ltmp = self.dir / ".tmp_LATEST"
+        ltmp.write_text(str(step))
+        os.replace(ltmp, self.dir / "LATEST")
+        self._gc()
+
+    def _gc(self):
+        steps = sorted(self.all_steps())
+        for s in steps[: -self.keep_last]:
+            for f in (self.dir / f"step_{s}.npz",
+                      self.dir / f"meta_{s}.json"):
+                try:
+                    f.unlink()
+                except FileNotFoundError:
+                    pass
+
+    def wait(self):
+        """Block until pending async saves are on disk (barrier before a
+        risky operation, and test determinism)."""
+        if self._worker is not None and self._worker.is_alive():
+            self._queue.join()
+        if self._error is not None:
+            err, self._error = self._error, None
+            raise err
+
+    # --------------------------------------------------------------- restore
+    def all_steps(self):
+        return [int(p.stem.split("_")[1])
+                for p in self.dir.glob("step_*.npz")]
+
+    def latest_step(self) -> Optional[int]:
+        latest = self.dir / "LATEST"
+        if not latest.exists():
+            return None
+        step = int(latest.read_text().strip())
+        return step if (self.dir / f"step_{step}.npz").exists() else None
+
+    def restore(self, template: Any, step: Optional[int] = None,
+                shardings: Any = None):
+        """Restore into the structure of ``template``. ``shardings`` (a
+        matching pytree of NamedSharding) reshards for the current mesh."""
+        step = self.latest_step() if step is None else step
+        if step is None:
+            return None, None
+        data = np.load(self.dir / f"step_{step}.npz")
+        flat = tree_flatten_with_paths(template)
+        leaves = []
+        for path, leaf in flat:
+            arr = data[path]
+            leaves.append(jnp.asarray(arr, getattr(leaf, "dtype", None)))
+        treedef = jax.tree_util.tree_structure(template)
+        tree = jax.tree_util.tree_unflatten(treedef, leaves)
+        if shardings is not None:
+            tree = jax.tree_util.tree_map(
+                lambda x, s: jax.device_put(x, s), tree, shardings)
+        meta_path = self.dir / f"meta_{step}.json"
+        extra = (json.loads(meta_path.read_text())["extra"]
+                 if meta_path.exists() else {})
+        return tree, {"step": step, **extra}

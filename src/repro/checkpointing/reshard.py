@@ -1,0 +1,40 @@
+"""Elastic resharding: move a checkpointed pytree onto a new mesh.
+
+When the watchdog excludes hosts (or capacity is added), the data axis
+shrinks/grows; checkpoints store full host arrays, so restore is just a
+device_put with the new shardings — but live state can also be resharded
+in place without a disk round trip. Divisibility is revalidated against
+the new mesh (a spec that no longer divides falls back to replication,
+mirroring repro.launch.sharding.resolve_spec).
+"""
+
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.launch.sharding import resolve_spec
+
+
+def reshard_tree(tree: Any, spec_tree: Any, new_mesh: Mesh) -> Any:
+    """Reshard every leaf to the (resolved) spec on the new mesh."""
+
+    def one(leaf, spec):
+        if not isinstance(spec, P):
+            spec = P()
+        resolved = resolve_spec(new_mesh, spec, leaf.shape)
+        return jax.device_put(leaf, NamedSharding(new_mesh, resolved))
+
+    return jax.tree_util.tree_map(one, tree, spec_tree)
+
+
+def elastic_restore(ckpt_manager, template: Any, spec_tree: Any,
+                    new_mesh: Mesh, step=None):
+    """CheckpointManager.restore + reshard onto the (possibly different)
+    current mesh in one call."""
+    restored, meta = ckpt_manager.restore(template, step=step)
+    if restored is None:
+        return None, None
+    return reshard_tree(restored, spec_tree, new_mesh), meta

@@ -1,0 +1,21 @@
+"""Shared low-level utilities: pytree helpers, registries, logging."""
+
+from repro.common.tree import (
+    tree_zeros_like,
+    tree_add,
+    tree_scale,
+    tree_global_norm,
+    tree_size,
+    tree_bytes,
+)
+from repro.common.registry import Registry
+
+__all__ = [
+    "tree_zeros_like",
+    "tree_add",
+    "tree_scale",
+    "tree_global_norm",
+    "tree_size",
+    "tree_bytes",
+    "Registry",
+]

@@ -1,0 +1,37 @@
+"""Architecture registry: one module per assigned architecture.
+
+Usage: ``from repro.configs import get_config; cfg = get_config("olmo-1b")``.
+"""
+
+from __future__ import annotations
+
+import importlib
+
+from repro.models.config import ModelConfig
+
+ARCHS = (
+    "olmo-1b",
+    "smollm-135m",
+    "qwen2.5-3b",
+    "gemma3-4b",
+    "whisper-small",
+    "recurrentgemma-9b",
+    "qwen2-vl-7b",
+    "xlstm-1.3b",
+    "deepseek-v2-lite-16b",
+    "granite-moe-1b-a400m",
+)
+
+_MODULES = {name: name.replace("-", "_").replace(".", "_") for name in ARCHS}
+
+
+def get_config(name: str) -> ModelConfig:
+    if name not in _MODULES:
+        known = ", ".join(ARCHS)
+        raise KeyError(f"unknown arch '{name}'; known: {known}")
+    mod = importlib.import_module(f"repro.configs.{_MODULES[name]}")
+    return mod.CONFIG
+
+
+def all_configs():
+    return {name: get_config(name) for name in ARCHS}

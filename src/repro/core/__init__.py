@@ -1,0 +1,23 @@
+"""Perona core: robust infrastructure fingerprinting (paper §III).
+
+Pipeline: standardized benchmark metrics -> stateful preprocessing
+(unify / select / orient / normalize / impute / type-enrich) ->
+autoencoder codes -> graph-contextual aggregation over benchmark
+execution chains -> anomaly scoring + aspect-based ranking, trained with
+the paper's five-task additive loss (MSE + CBFL + TML + CEL + MRL).
+"""
+
+from repro.core.preprocess import Preprocessor
+from repro.core.model import PeronaModel, PeronaConfig
+from repro.core.graph_data import build_graphs, PeronaBatch
+from repro.core.ranking import aspect_scores, rank_machines
+
+__all__ = [
+    "Preprocessor",
+    "PeronaModel",
+    "PeronaConfig",
+    "build_graphs",
+    "PeronaBatch",
+    "aspect_scores",
+    "rank_machines",
+]

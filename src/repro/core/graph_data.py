@@ -1,0 +1,122 @@
+"""Benchmark-execution graphs (paper §III-C), TPU-friendly dense layout.
+
+Graphs are composed per (benchmark type x compute instance): the
+chronologically sorted executions of one type on one machine form a
+chain, and each node receives forward edges from its P=3 immediate
+predecessors. Edge attributes concatenate the source run's low-level
+machine metrics with encodings of the time interval between the pair.
+
+Because the in-degree is fixed, the whole dataset is one dense batch:
+  x (N, F'), nbr (N, P) int32 (-1 = missing), edge (N, P, A),
+  types/labels/norm ground truth per node — no scatter/gather graphs
+(TPU adaptation; DESIGN.md §3).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.core.preprocess import Preprocessor
+from repro.fingerprint.records import BenchmarkExecution
+
+P_PREDECESSORS = 3
+
+
+@dataclasses.dataclass
+class PeronaBatch:
+    x: np.ndarray  # (N, F') preprocessed features
+    type_id: np.ndarray  # (N,) int32 benchmark type
+    anomaly: np.ndarray  # (N,) int32 0/1 ground truth (stress marker)
+    nbr: np.ndarray  # (N, P) int32 predecessor indices, -1 missing
+    nbr_mask: np.ndarray  # (N, P) bool
+    edge: np.ndarray  # (N, P, A) edge attributes in (0,1)
+    norm_gt: np.ndarray  # (N,) ranking ground truth (p-norm of x')
+    machine: List[str]  # (N,) node names
+    chain: np.ndarray  # (N,) int32 chain id (type x machine)
+
+    def __len__(self) -> int:
+        return len(self.x)
+
+    def subset(self, idx: np.ndarray) -> "PeronaBatch":
+        """Subset *with remapped edges* (edges to excluded nodes are
+        dropped)."""
+        idx = np.asarray(idx)
+        remap = -np.ones(len(self.x), np.int64)
+        remap[idx] = np.arange(len(idx))
+        nbr = np.where(self.nbr >= 0, remap[self.nbr], -1)[idx]
+        return PeronaBatch(
+            x=self.x[idx], type_id=self.type_id[idx],
+            anomaly=self.anomaly[idx], nbr=nbr.astype(np.int32),
+            nbr_mask=nbr >= 0, edge=self.edge[idx],
+            norm_gt=self.norm_gt[idx],
+            machine=[self.machine[i] for i in idx],
+            chain=self.chain[idx])
+
+
+def _time_encodings(dt: float, t_src: float) -> List[float]:
+    hod = (t_src / 3600.0) % 24.0
+    return [
+        float(np.log1p(dt) / 12.0),
+        float(min(dt / 3600.0, 1.0)),
+        0.5 + 0.5 * float(np.sin(2 * np.pi * hod / 24)),
+        0.5 + 0.5 * float(np.cos(2 * np.pi * hod / 24)),
+    ]
+
+
+def build_graphs(records: Sequence[BenchmarkExecution],
+                 preproc: Preprocessor) -> PeronaBatch:
+    x = preproc.transform(records)
+    edge_feats = preproc.transform_edges(records)
+    A = edge_feats.shape[1] + 4
+    N = len(records)
+    type_id = np.asarray([preproc.type_id(r) for r in records], np.int32)
+    anomaly = np.asarray([int(r.stressed) for r in records], np.int32)
+    norm_gt = preproc.groundtruth_norm(x)
+
+    chains: Dict[Tuple[str, str], List[int]] = {}
+    for i, r in enumerate(records):
+        chains.setdefault((r.benchmark_type, r.machine), []).append(i)
+
+    nbr = -np.ones((N, P_PREDECESSORS), np.int32)
+    edge = np.zeros((N, P_PREDECESSORS, A), np.float32)
+    chain_id = np.zeros((N,), np.int32)
+    for cid, (key, idxs) in enumerate(sorted(chains.items())):
+        idxs = sorted(idxs, key=lambda i: records[i].t)
+        for pos, i in enumerate(idxs):
+            chain_id[i] = cid
+            preds = idxs[max(0, pos - P_PREDECESSORS):pos]
+            for p, j in enumerate(reversed(preds)):
+                nbr[i, p] = j
+                dt = max(records[i].t - records[j].t, 0.0)
+                edge[i, p] = np.concatenate([
+                    edge_feats[j],
+                    np.asarray(_time_encodings(dt, records[j].t)),
+                ])
+    return PeronaBatch(
+        x=x.astype(np.float32), type_id=type_id, anomaly=anomaly, nbr=nbr,
+        nbr_mask=nbr >= 0, edge=edge, norm_gt=norm_gt.astype(np.float32),
+        machine=[r.machine for r in records], chain=chain_id)
+
+
+def chronological_split(records: Sequence[BenchmarkExecution],
+                        fractions=(0.6, 0.2, 0.2)):
+    """Per-(machine x type) chronological split (every node appears in
+    every split — the paper's node-name stratification — while graph
+    edges stay causal)."""
+    chains: Dict[Tuple[str, str], List[int]] = {}
+    for i, r in enumerate(records):
+        chains.setdefault((r.benchmark_type, r.machine), []).append(i)
+    train, val, test = [], [], []
+    for idxs in chains.values():
+        idxs = sorted(idxs, key=lambda i: records[i].t)
+        n = len(idxs)
+        a = int(n * fractions[0])
+        b = int(n * (fractions[0] + fractions[1]))
+        train += idxs[:a]
+        val += idxs[a:b]
+        test += idxs[b:]
+    pick = lambda ids: [records[i] for i in sorted(ids)]
+    return pick(train), pick(val), pick(test)

@@ -1,0 +1,111 @@
+"""Perona's five training objectives (paper §III-C/D training notes).
+
+  MSE  — autoencoder reconstruction
+  CBFL — class-balanced focal loss [Cui et al. 2019] for outlier
+         detection (binary, heavy normal/anomalous imbalance)
+  TML  — triplet margin loss [FaceNet] + hard-pair miner for per-type
+         clustering of codes (cosine geometry)
+  CEL  — cross entropy on the linear benchmark-type probe
+  MRL  — margin ranking loss against the p-norm ground truth within each
+         type; anomalous codes must rank below the lowest normal code
+
+All losses are masked-mean over valid nodes and combined additively.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG = -1e30
+
+
+def mse_loss(recon, x, valid):
+    err = jnp.sum(jnp.square(recon - x), axis=-1) / x.shape[-1]
+    return jnp.sum(err * valid) / jnp.maximum(jnp.sum(valid), 1.0)
+
+
+def class_balanced_focal_loss(logit, label, valid, *, gamma: float = 2.0,
+                              beta: float = 0.999):
+    """Binary CBFL. logit (N,), label (N,) in {0,1}."""
+    label = label.astype(jnp.float32)
+    n_pos = jnp.sum(label * valid)
+    n_neg = jnp.sum((1 - label) * valid)
+    eff = lambda n: (1.0 - jnp.power(beta, jnp.maximum(n, 1.0))) / (1 - beta)
+    w_pos = 1.0 / eff(n_pos)
+    w_neg = 1.0 / eff(n_neg)
+    # normalize weights to sum to 2 (class count), as in the paper's ref
+    z = w_pos + w_neg
+    w_pos, w_neg = 2 * w_pos / z, 2 * w_neg / z
+    p = jax.nn.sigmoid(logit)
+    pt = jnp.where(label > 0, p, 1 - p)
+    w = jnp.where(label > 0, w_pos, w_neg)
+    focal = -w * jnp.power(1 - pt, gamma) * jnp.log(jnp.maximum(pt, 1e-12))
+    return jnp.sum(focal * valid) / jnp.maximum(jnp.sum(valid), 1.0)
+
+
+def cross_entropy_loss(logits, labels, valid):
+    logp = jax.nn.log_softmax(logits, -1)
+    nll = -jnp.take_along_axis(logp, labels[:, None], -1)[:, 0]
+    return jnp.sum(nll * valid) / jnp.maximum(jnp.sum(valid), 1.0)
+
+
+def triplet_margin_loss(codes, type_id, valid, *, margin: float = 0.3):
+    """Cosine-distance TML with a batch-hard miner: per anchor, hardest
+    positive (same type, max distance) and hardest negative (other type,
+    min distance)."""
+    c = codes / jnp.maximum(
+        jnp.linalg.norm(codes, axis=-1, keepdims=True), 1e-9)
+    sim = c @ c.T  # (N, N)
+    dist = 1.0 - sim
+    same = (type_id[:, None] == type_id[None, :]) & (valid[:, None] > 0) \
+        & (valid[None, :] > 0)
+    eye = jnp.eye(codes.shape[0], dtype=bool)
+    pos_mask = same & ~eye
+    neg_mask = (~same) & (valid[:, None] > 0) & (valid[None, :] > 0)
+    hardest_pos = jnp.max(jnp.where(pos_mask, dist, -1.0), axis=1)
+    hardest_neg = jnp.min(jnp.where(neg_mask, dist, 4.0), axis=1)
+    has_pair = (jnp.any(pos_mask, 1) & jnp.any(neg_mask, 1)).astype(
+        jnp.float32) * valid
+    loss = jnp.maximum(hardest_pos - hardest_neg + margin, 0.0)
+    return jnp.sum(loss * has_pair) / jnp.maximum(jnp.sum(has_pair), 1.0)
+
+
+def pnorm(codes, p: float = 10.0):
+    return jnp.power(
+        jnp.sum(jnp.power(jnp.abs(codes) + 1e-12, p), axis=-1), 1.0 / p)
+
+
+def margin_ranking_loss(codes, norm_gt, type_id, anomaly, valid, *,
+                        p: float = 10.0, margin: float = 0.01,
+                        anom_margin: float = 0.1):
+    """Pairwise ranking of code p-norms against the ground-truth p-norm
+    ranking of preprocessed vectors, per benchmark type; anomalous codes
+    are pushed below the lowest normal score of their type."""
+    s = pnorm(codes, p)  # (N,)
+    same = (type_id[:, None] == type_id[None, :])
+    vpair = (valid[:, None] > 0) & (valid[None, :] > 0) & same
+    normal = (anomaly == 0) & (valid > 0)
+    both_normal = vpair & normal[:, None] & normal[None, :]
+    y = jnp.sign(norm_gt[:, None] - norm_gt[None, :])
+    pair_loss = jnp.maximum(-y * (s[:, None] - s[None, :]) + margin, 0.0)
+    pair_loss = jnp.where(both_normal & (y != 0), pair_loss, 0.0)
+    n_pairs = jnp.sum((both_normal & (y != 0)).astype(jnp.float32))
+    rank_term = jnp.sum(pair_loss) / jnp.maximum(n_pairs, 1.0)
+
+    # anomalous below the lowest normal score of the same type
+    min_normal = jnp.min(
+        jnp.where(both_normal, s[None, :], jnp.inf), axis=1)  # per anchor
+    anom = (anomaly == 1) & (valid > 0)
+    # per-type minimum normal score
+    big = jnp.where(normal, s, jnp.inf)
+    # compute per-node min over same-type normals
+    min_same = jnp.min(jnp.where(same & normal[None, :], s[None, :],
+                                 jnp.inf), axis=1)
+    anom_loss = jnp.where(
+        anom & jnp.isfinite(min_same),
+        jnp.maximum(s - (min_same - anom_margin), 0.0), 0.0)
+    anom_term = jnp.sum(anom_loss) / jnp.maximum(
+        jnp.sum(anom.astype(jnp.float32)), 1.0)
+    del min_normal, big
+    return rank_term + anom_term

@@ -1,0 +1,228 @@
+"""Perona model: autoencoder + graph aggregation + heads (paper §III-C).
+
+enc/dec follow the Bellamy-style MLP design with a sigmoid decoder head;
+``agg`` averages two graph transforms — a TransformerConv-style edge-
+attention (fused edge-softmax Pallas kernel on TPU) and a TAGConv-style
+hop propagation — preceded by adjacency (edge) dropout and followed by
+SELU, alpha-dropout and a final linear transform. The anomaly head
+scores sigma(f1(v_agg - v)); a linear probe predicts the benchmark type.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import losses as L
+from repro.models import nn
+
+
+@dataclasses.dataclass(frozen=True)
+class PeronaConfig:
+    feature_dim: int  # F' (selected metrics + one-hot types)
+    edge_dim: int  # A
+    n_types: int = 6
+    code_dim: int = 32  # K
+    hidden: int = 64
+    tag_hops: int = 2
+    heads: int = 4  # attention heads of the transformer conv
+    edge_dropout: float = 0.1
+    feature_dropout: float = 0.1
+    alpha_dropout: float = 0.05
+    use_root_weight: bool = True
+    p_norm: float = 10.0
+    cbfl_gamma: float = 2.0
+    cbfl_beta: float = 0.999
+    tml_margin: float = 0.3
+    mrl_margin: float = 0.01
+    anom_margin: float = 0.1
+    loss_weights: Tuple[float, float, float, float, float] = (
+        1.0, 1.0, 1.0, 1.0, 1.0)  # mse, cbfl, cel, tml, mrl
+    gnn_impl: str = "reference"  # reference | pallas
+
+
+def _mlp_init(init: nn.Init, dims):
+    params = []
+    for i, (a, b) in enumerate(zip(dims[:-1], dims[1:])):
+        p, _ = nn.linear_init(init, a, b, (None, None), bias=True)
+        params.append(p)
+    return params
+
+
+def _mlp(params, x, final=None):
+    for i, p in enumerate(params):
+        x = nn.linear(p, x)
+        if i + 1 < len(params):
+            x = jax.nn.selu(x)
+    if final == "sigmoid":
+        x = jax.nn.sigmoid(x)
+    return x
+
+
+def perona_init(cfg: PeronaConfig, key) -> Dict[str, Any]:
+    init = nn.Init(key, dtype=jnp.float32)
+    K, H, A, F = cfg.code_dim, cfg.hidden, cfg.edge_dim, cfg.feature_dim
+    p: Dict[str, Any] = {}
+    p["enc"] = _mlp_init(init, (F, H, K))
+    p["dec"] = _mlp_init(init, (K, H, F))
+    # TransformerConv-style params
+    for nm in ("wq", "wk", "wv"):
+        p[nm], _ = nn.linear_init(init, K, K, (None, None), bias=True)
+    p["we_k"], _ = nn.linear_init(init, A, K, (None, None), bias=True)
+    p["we_v"], _ = nn.linear_init(init, A, K, (None, None), bias=True)
+    # TAGConv-style hop weights
+    p["tag"] = [
+        nn.linear_init(init, K, K, (None, None), bias=True)[0]
+        for _ in range(cfg.tag_hops + 1)
+    ]
+    if cfg.use_root_weight:
+        p["root"], _ = nn.linear_init(init, K, K, (None, None), bias=True)
+    p["out"], _ = nn.linear_init(init, K, K, (None, None), bias=True)
+    p["f1"] = _mlp_init(init, (K, H, 1))
+    p["cls"], _ = nn.linear_init(init, K, cfg.n_types, (None, None),
+                                 bias=True)
+    return p
+
+
+# ---------------------------------------------------------------------------
+# Graph aggregation
+# ---------------------------------------------------------------------------
+
+def _gather_neighbors(codes, nbr):
+    """codes (N,K), nbr (N,P) -> (N,P,K) with index -1 mapped to row 0
+    (masked later)."""
+    idx = jnp.maximum(nbr, 0)
+    return codes[idx]
+
+
+def _transformer_conv(p, cfg, codes, nbr, mask, edge):
+    q = nn.linear(p["wq"], codes)  # (N,K)
+    nb = _gather_neighbors(codes, nbr)  # (N,P,K)
+    k = nn.linear(p["wk"], nb) + nn.linear(p["we_k"], edge)
+    v = nn.linear(p["wv"], nb) + nn.linear(p["we_v"], edge)
+    K = cfg.code_dim
+    hN = cfg.heads
+    hd = K // hN
+    N, P = mask.shape
+    if cfg.gnn_impl == "pallas":
+        from repro.kernels.edge_softmax import ops as es_ops
+
+        qh = q.reshape(N, hN, hd).transpose(1, 0, 2).reshape(hN * N, hd)
+        kh = k.reshape(N, P, hN, hd).transpose(2, 0, 1, 3).reshape(
+            hN * N, P, hd)
+        vh = v.reshape(N, P, hN, hd).transpose(2, 0, 1, 3).reshape(
+            hN * N, P, hd)
+        mh = jnp.tile(mask, (hN, 1))
+        out, _ = es_ops.edge_softmax_aggregate(qh, kh, vh, mh)
+        out = out.reshape(hN, N, hd).transpose(1, 0, 2).reshape(N, K)
+        return out
+    from repro.kernels.edge_softmax import ref as es_ref
+
+    qh = q.reshape(N, hN, hd)
+    kh = k.reshape(N, P, hN, hd)
+    vh = v.reshape(N, P, hN, hd)
+    outs = []
+    for h in range(hN):
+        o, _ = es_ref.edge_softmax_aggregate(qh[:, h], kh[:, :, h],
+                                             vh[:, :, h], mask)
+        outs.append(o)
+    return jnp.concatenate(outs, axis=-1)
+
+
+def _tag_conv(p, cfg, codes, nbr, mask):
+    """Hop propagation with masked-mean neighbor aggregation."""
+    out = nn.linear(p["tag"][0], codes)
+    x = codes
+    denom = jnp.maximum(jnp.sum(mask, 1, keepdims=True), 1.0)
+    for hop in range(1, cfg.tag_hops + 1):
+        nb = _gather_neighbors(x, nbr)  # (N,P,K)
+        x = jnp.sum(nb * mask[..., None], axis=1) / denom
+        out = out + nn.linear(p["tag"][hop], x)
+    return out
+
+
+def aggregate(p, cfg: PeronaConfig, codes, nbr, mask, edge, *, rng=None,
+              train: bool = False):
+    """The paper's agg: edge dropout -> mean(TransformerConv, TAGConv)
+    -> SELU -> alpha dropout -> linear (+root skip)."""
+    if train and rng is not None and cfg.edge_dropout > 0:
+        rng, sub = jax.random.split(rng)
+        keep = jax.random.bernoulli(sub, 1.0 - cfg.edge_dropout, mask.shape)
+        mask = mask & keep
+    t_out = _transformer_conv(p, cfg, codes, nbr, mask, edge)
+    g_out = _tag_conv(p, cfg, codes, nbr, mask)
+    out = 0.5 * (t_out + g_out)
+    out = jax.nn.selu(out)
+    if train and rng is not None and cfg.alpha_dropout > 0:
+        rng, sub = jax.random.split(rng)
+        # SELU-preserving alpha dropout
+        alpha_p = -1.7580993408473766
+        keep = jax.random.bernoulli(sub, 1.0 - cfg.alpha_dropout, out.shape)
+        q = 1.0 - cfg.alpha_dropout
+        a = (q + alpha_p ** 2 * q * (1 - q)) ** -0.5
+        b = -a * alpha_p * (1 - q)
+        out = a * jnp.where(keep, out, alpha_p) + b
+    out = nn.linear(p["out"], out)
+    if cfg.use_root_weight:
+        out = out + nn.linear(p["root"], codes)
+    return jax.nn.selu(out)
+
+
+# ---------------------------------------------------------------------------
+# End-to-end model
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class PeronaModel:
+    cfg: PeronaConfig
+
+    def init(self, key):
+        return perona_init(self.cfg, key)
+
+    def forward(self, params, batch, *, rng=None, train: bool = False):
+        """batch: dict with x, nbr, nbr_mask, edge (jnp arrays).
+
+        Returns dict(codes, recon, agg, anom_logit, type_logits).
+        """
+        x = batch["x"]
+        if train and rng is not None and self.cfg.feature_dropout > 0:
+            rng, sub = jax.random.split(rng)
+            keep = jax.random.bernoulli(
+                sub, 1.0 - self.cfg.feature_dropout, x.shape)
+            x = x * keep / (1.0 - self.cfg.feature_dropout)
+        codes = _mlp(params["enc"], x)
+        recon = _mlp(params["dec"], codes, final="sigmoid")
+        agg = aggregate(params, self.cfg, codes, batch["nbr"],
+                        batch["nbr_mask"], batch["edge"], rng=rng,
+                        train=train)
+        anom_logit = _mlp(params["f1"], agg - codes)[:, 0]
+        type_logits = nn.linear(params["cls"], codes)
+        return {"codes": codes, "recon": recon, "agg": agg,
+                "anom_logit": anom_logit, "type_logits": type_logits}
+
+    def loss(self, params, batch, rng):
+        out = self.forward(params, batch, rng=rng, train=True)
+        cfg = self.cfg
+        valid = batch.get("valid")
+        if valid is None:
+            valid = jnp.ones(batch["x"].shape[0], jnp.float32)
+        w = cfg.loss_weights
+        mse = L.mse_loss(out["recon"], batch["x"], valid)
+        cbfl = L.class_balanced_focal_loss(
+            out["anom_logit"], batch["anomaly"], valid,
+            gamma=cfg.cbfl_gamma, beta=cfg.cbfl_beta)
+        cel = L.cross_entropy_loss(out["type_logits"], batch["type_id"],
+                                   valid)
+        tml = L.triplet_margin_loss(out["codes"], batch["type_id"], valid,
+                                    margin=cfg.tml_margin)
+        mrl = L.margin_ranking_loss(
+            out["codes"], batch["norm_gt"], batch["type_id"],
+            batch["anomaly"], valid, p=cfg.p_norm, margin=cfg.mrl_margin,
+            anom_margin=cfg.anom_margin)
+        total = (w[0] * mse + w[1] * cbfl + w[2] * cel + w[3] * tml
+                 + w[4] * mrl)
+        return total, {"mse": mse, "cbfl": cbfl, "cel": cel, "tml": tml,
+                       "mrl": mrl}

@@ -1,0 +1,5 @@
+"""Deterministic, checkpointable data pipeline."""
+
+from repro.data.tokens import TokenPipeline
+
+__all__ = ["TokenPipeline"]

@@ -1,0 +1,67 @@
+"""Synthetic token pipeline: deterministic, shardable, restartable.
+
+Batches are pure functions of (seed, step), so checkpoint/restart resumes
+the stream exactly (the pipeline "state" is just the step counter — the
+property tests assert batch(step) is reproducible across restarts). The
+stream has learnable structure: a fixed random successor table with
+temperature noise, giving a decreasing LM loss for the end-to-end
+training example without any external corpus.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Iterator, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass
+class TokenPipeline:
+    vocab_size: int
+    seq_len: int
+    global_batch: int
+    seed: int = 0
+    structure: float = 0.7  # P(next = successor(prev)); rest uniform
+
+    def __post_init__(self):
+        rng = np.random.default_rng(self.seed)
+        self._successor = jnp.asarray(
+            rng.permutation(self.vocab_size), jnp.int32)
+
+    def batch_at(self, step: int) -> Dict[str, jnp.ndarray]:
+        """The batch for a given step (pure; identical across restarts)."""
+        key = jax.random.fold_in(jax.random.PRNGKey(self.seed), step)
+        k1, k2, k3 = jax.random.split(key, 3)
+        B, S, V = self.global_batch, self.seq_len, self.vocab_size
+        first = jax.random.randint(k1, (B, 1), 0, V)
+        noise = jax.random.randint(k2, (B, S), 0, V)
+        use_succ = jax.random.bernoulli(k3, self.structure, (B, S))
+
+        def step_fn(prev, inp):
+            nz, us = inp
+            nxt = jnp.where(us, self._successor[prev], nz)
+            return nxt, nxt
+
+        _, toks = jax.lax.scan(
+            step_fn, first[:, 0],
+            (jnp.moveaxis(noise, 1, 0), jnp.moveaxis(use_succ, 1, 0)))
+        tokens = jnp.moveaxis(toks, 0, 1)  # (B, S)
+        labels = jnp.concatenate(
+            [tokens[:, 1:], tokens[:, :1]], axis=1)
+        return {"tokens": tokens, "labels": labels}
+
+    def iterate(self, start_step: int = 0) -> Iterator[Dict]:
+        step = start_step
+        while True:
+            yield self.batch_at(step)
+            step += 1
+
+    def state_dict(self, step: int) -> Dict:
+        return {"seed": self.seed, "step": step}
+
+    @staticmethod
+    def restore_step(state: Dict) -> int:
+        return int(state["step"])

@@ -1,0 +1,20 @@
+"""Benchmark substrate: standardized tool suites over simulated machines.
+
+The paper gathers data with Kubestone-driven sysbench / fio / ioping /
+qperf / iperf3 runs on K3s clusters; this container has no Kubernetes,
+so the suite is *simulated* from calibrated machine profiles with
+heteroscedastic noise and ChaosMesh-style stress injection (DESIGN.md
+§3). Everything downstream of the raw metric records is faithful.
+"""
+
+from repro.fingerprint.records import BenchmarkExecution
+from repro.fingerprint.machines import MACHINE_PROFILES, MachineProfile
+from repro.fingerprint.runner import SuiteRunner, BENCHMARK_TYPES
+
+__all__ = [
+    "BenchmarkExecution",
+    "MachineProfile",
+    "MACHINE_PROFILES",
+    "SuiteRunner",
+    "BENCHMARK_TYPES",
+]

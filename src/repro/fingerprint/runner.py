@@ -1,0 +1,83 @@
+"""Suite runner: quasi-random scheduling of benchmark executions.
+
+Mirrors the paper's acquisition (§IV-A): per machine, each benchmark
+type is executed ``runs_per_type`` times, quasi-randomly spread over the
+experiment window; network benchmarks are serialized cluster-wide (only
+one in flight); a configurable fraction of runs receives ChaosMesh-style
+stress on the benchmarked resource.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, List, Optional, Sequence
+
+import numpy as np
+
+from repro.fingerprint.machines import MACHINE_PROFILES
+from repro.fingerprint.records import BenchmarkExecution
+from repro.fingerprint.tools import EXTRA_CONSTANTS, TOOLS, node_metrics
+
+BENCHMARK_TYPES = tuple(TOOLS)
+
+_ASPECT = {
+    "sysbench-cpu": "cpu",
+    "sysbench-memory": "memory",
+    "fio": "disk",
+    "ioping": "disk",
+    "qperf": "network",
+    "iperf3": "network",
+}
+
+
+class SuiteRunner:
+    def __init__(self, seed: int = 0, duration_s: float = 86400.0):
+        self.rng = np.random.default_rng(seed)
+        self.duration_s = duration_s
+
+    def run(self, machines: Dict[str, str], runs_per_type: int,
+            stress_fraction: float = 0.0,
+            degraded_machines: Optional[Sequence[str]] = None,
+            ) -> List[BenchmarkExecution]:
+        """machines: {node_name: machine_type}. ``degraded_machines`` are
+        permanently degraded (every run stressed) — used by the runtime
+        watchdog tests."""
+        degraded = set(degraded_machines or ())
+        records: List[BenchmarkExecution] = []
+        net_slots = iter(np.sort(self.rng.uniform(
+            0, self.duration_s,
+            2 * runs_per_type * max(len(machines), 1) + 8)))
+        for node, mtype in machines.items():
+            profile = MACHINE_PROFILES[mtype]
+            for btype in BENCHMARK_TYPES:
+                aspect = _ASPECT[btype]
+                times = np.sort(self.rng.uniform(0, self.duration_s,
+                                                 runs_per_type))
+                for t in times:
+                    stressed = (node in degraded or
+                                bool(self.rng.random() < stress_fraction))
+                    severity = (float(self.rng.uniform(0.15, 1.0))
+                                if stressed else 0.0)
+                    if aspect == "network":
+                        t = float(next(net_slots))  # serialized slot
+                    metrics = dict(TOOLS[btype](profile, self.rng, severity))
+                    metrics.update(EXTRA_CONSTANTS[btype])
+                    records.append(BenchmarkExecution(
+                        benchmark_type=btype,
+                        machine=node,
+                        machine_type=mtype,
+                        t=float(t),
+                        metrics=metrics,
+                        node_metrics=node_metrics(profile, self.rng,
+                                                  severity, aspect),
+                        stressed=stressed,
+                    ))
+        records.sort(key=lambda r: r.t)
+        return records
+
+
+def paper_acquisition(seed: int = 0) -> List[BenchmarkExecution]:
+    """§IV-C setup: 3 benchmarking nodes (e2-medium), 6 types x 100 runs
+    each, 20% stressed -> 1800 executions."""
+    runner = SuiteRunner(seed=seed)
+    machines = {f"node-{i}": "e2-medium" for i in range(1, 4)}
+    return runner.run(machines, runs_per_type=100, stress_fraction=0.2)

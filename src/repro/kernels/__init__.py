@@ -1,0 +1,15 @@
+"""Pallas TPU kernels for the framework's compute hot spots.
+
+Each kernel subpackage has: kernel.py (pl.pallas_call + BlockSpec VMEM
+tiling), ops.py (jit'd public wrapper, custom_vjp where training needs
+gradients), ref.py (pure-jnp oracle used by the allclose test sweeps).
+
+Kernels lower for TPU; on this CPU container they are validated in
+interpret mode (pl.pallas_call(..., interpret=True)) against ref.py.
+
+Kernels:
+  flash_attention — causal / sliding-window / GQA online-softmax attention
+  rg_lru          — Griffin RG-LRU blocked linear scan
+  mlstm           — xLSTM chunkwise matrix-memory cell
+  edge_softmax    — Perona GNN fused edge-softmax + neighborhood aggregation
+"""

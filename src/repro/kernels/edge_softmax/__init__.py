@@ -1,0 +1,3 @@
+from repro.kernels.edge_softmax import ops, ref
+
+__all__ = ["ops", "ref"]

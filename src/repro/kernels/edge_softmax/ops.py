@@ -1,0 +1,63 @@
+"""Public wrapper for edge_softmax (pads N to a block multiple)."""
+
+from __future__ import annotations
+
+import functools
+import math
+import os
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.edge_softmax import kernel as K
+from repro.kernels.edge_softmax import ref
+
+
+def _interpret_default() -> bool:
+    if os.environ.get("REPRO_PALLAS_INTERPRET"):
+        return True
+    return jax.default_backend() != "tpu"
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(4, 5))
+def _agg(q, k, v, mask, scale, interpret):
+    bn = 512
+    N = q.shape[0]
+    pad = (-N) % min(bn, max(N, 1)) if N % min(bn, N or 1) else 0
+    # pad to a block multiple of 128 for small graphs
+    blk = min(bn, 1 << max(7, (N - 1).bit_length())) if N else 128
+    blk = min(blk, bn)
+    pad = (-N) % blk
+    if pad:
+        q = jnp.pad(q, ((0, pad), (0, 0)))
+        k = jnp.pad(k, ((0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, pad), (0, 0), (0, 0)))
+        mask = jnp.pad(mask, ((0, pad), (0, 0)))
+    out, att = K.edge_softmax_aggregate(q, k, v, mask, scale=scale,
+                                        block_n=blk, interpret=interpret)
+    return out[:N], att[:N]
+
+
+def _fwd(q, k, v, mask, scale, interpret):
+    return _agg(q, k, v, mask, scale, interpret), (q, k, v, mask)
+
+
+def _bwd(scale, interpret, res, g):
+    q, k, v, mask = res
+    _, vjp = jax.vjp(
+        lambda q_, k_, v_: ref.edge_softmax_aggregate(q_, k_, v_, mask,
+                                                      scale), q, k, v)
+    dq, dk, dv = vjp(g)
+    return dq, dk, dv, None
+
+
+_agg.defvjp(_fwd, _bwd)
+
+
+def edge_softmax_aggregate(q, k, v, mask, scale=None,
+                           interpret: bool | None = None):
+    """q: (N,F); k/v: (N,P,F); mask: (N,P). Returns (out (N,F), att)."""
+    F = q.shape[-1]
+    scale = 1.0 / math.sqrt(F) if scale is None else scale
+    interpret = _interpret_default() if interpret is None else interpret
+    return _agg(q, k, v, mask.astype(bool), scale, interpret)

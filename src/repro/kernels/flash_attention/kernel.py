@@ -1,0 +1,129 @@
+"""FlashAttention-2 style Pallas TPU kernel.
+
+Layout: q (B, H, S, D), k/v (B, KH, T, D). Grid = (B, H, num_q_blocks,
+num_kv_blocks); the trailing grid axis is sequential on TPU, so the
+online-softmax state (m, l) and the output accumulator live in VMEM
+scratch and are carried across kv blocks. Causal and sliding-window
+masks are applied blockwise; fully-masked kv blocks are predicated out
+with pl.when (TPU grids cannot skip steps, but the MXU work is skipped).
+
+Block sizes default to (512, 512) and are clamped to the sequence
+lengths; D is kept whole (hd <= 256 fits VMEM comfortably:
+512*256*4B = 0.5 MB per block).
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _attn_kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
+                 scale: float, causal: bool, window: int, bq: int, bkv: int,
+                 num_kv_blocks: int):
+    qb = pl.program_id(2)
+    kb = pl.program_id(3)
+
+    @pl.when(kb == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q_start = qb * bq
+    k_start = kb * bkv
+
+    # blockwise reachability: block is live unless fully masked
+    live = True
+    if causal:
+        live = k_start <= q_start + bq - 1
+    if window > 0:
+        live = jnp.logical_and(
+            live, k_start + bkv - 1 >= q_start - window + 1) \
+            if not isinstance(live, bool) else \
+            (k_start + bkv - 1 >= q_start - window + 1)
+
+    @pl.when(live)
+    def _compute():
+        q = q_ref[0, 0].astype(jnp.float32)  # (bq, d)
+        k = k_ref[0, 0].astype(jnp.float32)  # (bkv, d)
+        v = v_ref[0, 0].astype(jnp.float32)
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32) * scale  # (bq, bkv)
+
+        q_pos = q_start + jax.lax.broadcasted_iota(jnp.int32, (bq, bkv), 0)
+        k_pos = k_start + jax.lax.broadcasted_iota(jnp.int32, (bq, bkv), 1)
+        mask = jnp.ones((bq, bkv), jnp.bool_)
+        if causal:
+            mask = jnp.logical_and(mask, k_pos <= q_pos)
+        if window > 0:
+            mask = jnp.logical_and(mask, q_pos - k_pos < window)
+        s = jnp.where(mask, s, NEG_INF)
+
+        m_prev = m_scr[...]  # (bq, 1)
+        l_prev = l_scr[...]
+        m_cur = jnp.max(s, axis=1, keepdims=True)
+        m_new = jnp.maximum(m_prev, m_cur)
+        alpha = jnp.exp(m_prev - m_new)
+        p = jnp.exp(s - m_new)  # (bq, bkv)
+        l_new = l_prev * alpha + jnp.sum(p, axis=1, keepdims=True)
+        pv = jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        acc_scr[...] = acc_scr[...] * alpha + pv
+        m_scr[...] = m_new
+        l_scr[...] = l_new
+
+    @pl.when(kb == num_kv_blocks - 1)
+    def _finalize():
+        l = l_scr[...]
+        o_ref[0, 0] = (acc_scr[...] / jnp.maximum(l, 1e-30)).astype(
+            o_ref.dtype)
+
+
+def flash_attention_fwd(q, k, v, *, causal: bool = True, window: int = 0,
+                        scale: float | None = None, block_q: int = 512,
+                        block_kv: int = 512, interpret: bool = False):
+    """q: (B, H, S, D); k/v: (B, KH, T, D) with H % KH == 0."""
+    B, H, S, D = q.shape
+    KH, T = k.shape[1], k.shape[2]
+    assert H % KH == 0, (H, KH)
+    group = H // KH
+    scale = 1.0 / math.sqrt(D) if scale is None else scale
+    bq = min(block_q, S)
+    bkv = min(block_kv, T)
+    assert S % bq == 0 and T % bkv == 0, (S, bq, T, bkv)
+    num_kv_blocks = T // bkv
+    grid = (B, H, S // bq, num_kv_blocks)
+
+    kernel = functools.partial(
+        _attn_kernel, scale=scale, causal=causal, window=window, bq=bq,
+        bkv=bkv, num_kv_blocks=num_kv_blocks)
+
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, bq, D), lambda b, h, i, j: (b, h, i, 0)),
+            pl.BlockSpec((1, 1, bkv, D),
+                         lambda b, h, i, j, group=group: (b, h // group, j, 0)),
+            pl.BlockSpec((1, 1, bkv, D),
+                         lambda b, h, i, j, group=group: (b, h // group, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, bq, D), lambda b, h, i, j: (b, h, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, H, S, D), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq, 1), jnp.float32),
+            pltpu.VMEM((bq, 1), jnp.float32),
+            pltpu.VMEM((bq, D), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)

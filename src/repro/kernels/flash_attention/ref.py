@@ -1,0 +1,34 @@
+"""Pure-jnp oracle for flash_attention (materialized scores)."""
+
+from __future__ import annotations
+
+import math
+
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def attention(q, k, v, *, causal: bool = True, window: int = 0,
+              scale: float | None = None):
+    """q: (B, H, S, D); k/v: (B, KH, T, D). Returns (B, H, S, D)."""
+    B, H, S, D = q.shape
+    KH, T = k.shape[1], k.shape[2]
+    group = H // KH
+    scale = 1.0 / math.sqrt(D) if scale is None else scale
+    qf = q.astype(jnp.float32).reshape(B, KH, group, S, D)
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    s = jnp.einsum("bkgsd,bktd->bkgst", qf, kf) * scale
+    q_pos = jnp.arange(S)[:, None]
+    k_pos = jnp.arange(T)[None, :]
+    mask = jnp.ones((S, T), bool)
+    if causal:
+        mask &= k_pos <= q_pos
+    if window > 0:
+        mask &= (q_pos - k_pos) < window
+    s = jnp.where(mask, s, NEG_INF)
+    p = jnp.exp(s - jnp.max(s, -1, keepdims=True))
+    p = p / jnp.maximum(jnp.sum(p, -1, keepdims=True), 1e-30)
+    o = jnp.einsum("bkgst,bktd->bkgsd", p, vf)
+    return o.reshape(B, H, S, D).astype(q.dtype)

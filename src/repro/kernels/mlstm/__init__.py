@@ -1,0 +1,3 @@
+from repro.kernels.mlstm import ops, ref
+
+__all__ = ["ops", "ref"]

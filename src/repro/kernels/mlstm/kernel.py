@@ -1,0 +1,128 @@
+"""Chunkwise mLSTM Pallas TPU kernel.
+
+Grid = (BH, n_chunks); the chunk axis is sequential, so the matrix
+memory C (hd x hd), normalizer n and stabilizer m live in VMEM scratch
+and are carried across chunks. Within a chunk everything is
+MXU-friendly: (L x hd) @ (hd x L) score matmul, decay-masked (L x L)
+combine, and two (L x hd) matmuls for the intra/inter contributions.
+
+VMEM budget per step (L=64, hd=1024): q/k/v blocks 3*64*1024*4B = 0.8MB,
+C scratch 4MB, score/decay (64x64) negligible — fits the ~16MB VMEM of a
+v5e core with headroom for double buffering.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _mlstm_kernel(q_ref, k_ref, v_ref, li_ref, lf_ref,
+                  h_ref, cout_ref, nout_ref, mout_ref,
+                  c_scr, n_scr, m_scr, *, L: int, num_chunks: int):
+    cb = pl.program_id(1)
+
+    @pl.when(cb == 0)
+    def _init():
+        c_scr[...] = jnp.zeros_like(c_scr)
+        n_scr[...] = jnp.zeros_like(n_scr)
+        m_scr[...] = jnp.full_like(m_scr, -1e30)
+
+    q = q_ref[0].astype(jnp.float32)  # (L, hd)
+    k = k_ref[0].astype(jnp.float32)
+    v = v_ref[0].astype(jnp.float32)
+    li = li_ref[0].astype(jnp.float32)  # (L,)
+    lf = lf_ref[0].astype(jnp.float32)
+
+    C = c_scr[...]
+    n = n_scr[...]  # (1, hd)
+    m = m_scr[0, 0]
+
+    b = jnp.cumsum(lf)  # (L,)
+    total_f = b[L - 1]
+    dmat = b[:, None] - b[None, :] + li[None, :]  # (L, L)
+    row = jax.lax.broadcasted_iota(jnp.int32, (L, L), 0)
+    col = jax.lax.broadcasted_iota(jnp.int32, (L, L), 1)
+    dmat = jnp.where(col <= row, dmat, -jnp.inf)
+    inter_log = b + m  # (L,)
+    m_new = jnp.maximum(inter_log, jnp.max(dmat, axis=1))  # (L,)
+    dmat_s = jnp.exp(dmat - m_new[:, None])
+    inter_s = jnp.exp(inter_log - m_new)  # (L,)
+
+    scores = jax.lax.dot_general(
+        q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32)
+    weighted = scores * dmat_s
+    intra = jax.lax.dot_general(
+        weighted, v, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+    qC = jax.lax.dot_general(
+        q, C, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+    num = intra + qC * inter_s[:, None]
+    den = (jnp.sum(weighted, axis=1)
+           + jnp.sum(q * n, axis=1) * inter_s)
+    h = num / jnp.maximum(jnp.abs(den), jnp.exp(-m_new))[:, None]
+    h_ref[0] = h.astype(h_ref.dtype)
+
+    # ---- state update ----------------------------------------------------
+    m_next = jnp.maximum(total_f + m, jnp.max(b + li))
+    kdecay = jnp.exp(total_f - b + li - m_next)  # (L,)
+    decay_C = jnp.exp(total_f + m - m_next)
+    kd = k * kdecay[:, None]
+    C_next = decay_C * C + jax.lax.dot_general(
+        kd, v, (((0,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+    n_next = decay_C * n + jnp.sum(kd, axis=0)[None, :]
+    c_scr[...] = C_next
+    n_scr[...] = n_next
+    m_scr[0, 0] = m_next
+
+    @pl.when(cb == num_chunks - 1)
+    def _final():
+        cout_ref[0] = C_next
+        nout_ref[0] = n_next[0]
+        mout_ref[0, 0] = m_next
+
+
+def mlstm_chunkwise(q, k, v, log_i, log_f, *, chunk: int = 64,
+                    interpret: bool = False):
+    """q/k/v: (BH, S, hd); gates (BH, S) f32. Returns (h, (C, n, m))."""
+    BH, S, hd = q.shape
+    L = min(chunk, S)
+    assert S % L == 0, (S, L)
+    num_chunks = S // L
+    grid = (BH, num_chunks)
+
+    kernel = functools.partial(_mlstm_kernel, L=L, num_chunks=num_chunks)
+    h, C, n, m = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, L, hd), lambda i, c: (i, c, 0)),
+            pl.BlockSpec((1, L, hd), lambda i, c: (i, c, 0)),
+            pl.BlockSpec((1, L, hd), lambda i, c: (i, c, 0)),
+            pl.BlockSpec((1, L), lambda i, c: (i, c)),
+            pl.BlockSpec((1, L), lambda i, c: (i, c)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, L, hd), lambda i, c: (i, c, 0)),
+            pl.BlockSpec((1, hd, hd), lambda i, c: (i, 0, 0)),
+            pl.BlockSpec((1, hd), lambda i, c: (i, 0)),
+            pl.BlockSpec((1, 1), lambda i, c: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((BH, S, hd), q.dtype),
+            jax.ShapeDtypeStruct((BH, hd, hd), jnp.float32),
+            jax.ShapeDtypeStruct((BH, hd), jnp.float32),
+            jax.ShapeDtypeStruct((BH, 1), jnp.float32),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((hd, hd), jnp.float32),
+            pltpu.VMEM((1, hd), jnp.float32),
+            pltpu.VMEM((1, 1), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v, log_i, log_f)
+    return h, (C, n, m[:, 0])

@@ -1,0 +1,65 @@
+"""Pure-jnp oracle for the stabilized chunkwise mLSTM cell.
+
+Layout: q/k/v (BH, S, hd); log_i/log_f (BH, S) float32.
+State: (C (BH, hd, hd), n (BH, hd), m (BH,)).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def init_state(bh: int, hd: int):
+    return (jnp.zeros((bh, hd, hd), jnp.float32),
+            jnp.zeros((bh, hd), jnp.float32),
+            jnp.full((bh,), -1e30, jnp.float32))
+
+
+def mlstm_chunkwise(q, k, v, log_i, log_f, chunk: int = 64, state=None):
+    BH, S, hd = q.shape
+    if S % chunk != 0:
+        chunk = S
+    nc = S // chunk
+    if state is None:
+        state = init_state(BH, hd)
+
+    def resh(x):
+        return jnp.moveaxis(x.reshape(BH, nc, chunk, *x.shape[2:]), 1, 0)
+
+    qs, ks, vs = resh(q), resh(k), resh(v)
+    lis, lfs = resh(log_i.astype(jnp.float32)), resh(log_f.astype(jnp.float32))
+
+    def body(carry, inp):
+        C, n, m = carry
+        qc, kc, vc, li, lf = inp  # (BH, L, ...)
+        qc32, kc32, vc32 = (x.astype(jnp.float32) for x in (qc, kc, vc))
+        b = jnp.cumsum(lf, axis=1)  # (BH, L)
+        total_f = b[:, -1]  # (BH,)
+        dmat = b[:, :, None] - b[:, None, :] + li[:, None, :]  # (BH, i, j)
+        causal = jnp.tril(jnp.ones((qc.shape[1], qc.shape[1]), bool))
+        dmat = jnp.where(causal[None], dmat, -jnp.inf)
+        inter_log = b + m[:, None]  # (BH, i)
+        m_new = jnp.maximum(inter_log, jnp.max(dmat, axis=2))
+        dmat_s = jnp.exp(dmat - m_new[:, :, None])
+        inter_s = jnp.exp(inter_log - m_new)
+        scores = jnp.einsum("bid,bjd->bij", qc32, kc32)
+        intra = jnp.einsum("bij,bij,bjd->bid", scores, dmat_s, vc32)
+        inter = jnp.einsum("bid,bde->bie", qc32, C) * inter_s[..., None]
+        num = intra + inter
+        den = (jnp.einsum("bij,bij->bi", scores, dmat_s)
+               + jnp.einsum("bid,bd->bi", qc32, n) * inter_s)
+        h = num / jnp.maximum(jnp.abs(den), jnp.exp(-m_new))[..., None]
+
+        m_next = jnp.maximum(total_f + m, jnp.max(b + li, axis=1))
+        kdecay = jnp.exp(total_f[:, None] - b + li - m_next[:, None])
+        decay_C = jnp.exp(total_f + m - m_next)
+        C2 = (decay_C[:, None, None] * C
+              + jnp.einsum("bj,bjd,bje->bde", kdecay, kc32, vc32))
+        n2 = (decay_C[:, None] * n
+              + jnp.einsum("bj,bjd->bd", kdecay, kc32))
+        return (C2, n2, m_next), h.astype(q.dtype)
+
+    state, hs = jax.lax.scan(body, state, (qs, ks, vs, lis, lfs))
+    h = jnp.moveaxis(hs, 0, 1).reshape(BH, S, hd)
+    return h, state

@@ -1,0 +1,3 @@
+from repro.kernels.rg_lru import ops, ref
+
+__all__ = ["ops", "ref"]

@@ -1,0 +1,22 @@
+"""Pure-jnp oracle for the RG-LRU linear scan."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def linear_scan(a, b, h0=None):
+    """h_t = a_t h_{t-1} + b_t. a/b: (B, S, C). Returns (y, h_last)."""
+    a = a.astype(jnp.float32)
+    b = b.astype(jnp.float32)
+    if h0 is not None:
+        b = b.at[:, 0].add(a[:, 0] * h0.astype(jnp.float32))
+
+    def combine(e1, e2):
+        a1, b1 = e1
+        a2, b2 = e2
+        return a1 * a2, a2 * b1 + b2
+
+    _, y = jax.lax.associative_scan(combine, (a, b), axis=1)
+    return y, y[:, -1]

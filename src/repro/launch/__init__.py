@@ -1,0 +1,1 @@
+"""Launcher: production meshes, dry-run, training and serving drivers."""

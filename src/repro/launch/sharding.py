@@ -1,0 +1,153 @@
+"""Sharding-rule resolution for params, optimizer state, caches, inputs.
+
+Params carry PartitionSpecs from init; this module resolves them against
+a concrete mesh (divisibility fallbacks: a dim whose size does not divide
+its assigned axis is replicated), derives KV-cache shardings (KV-head
+sharding when divisible, sequence sharding otherwise), and batch input
+shardings over the (pod, data) axes.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.launch.mesh import axis_size, data_axes
+from repro.models.config import ModelConfig
+
+
+def _axis_entry_size(mesh: Mesh, entry) -> int:
+    if entry is None:
+        return 1
+    if isinstance(entry, str):
+        return axis_size(mesh, entry)
+    return axis_size(mesh, tuple(entry))
+
+
+def resolve_spec(mesh: Mesh, spec: P, shape: Tuple[int, ...]) -> P:
+    """Drop sharding on dims that don't divide the assigned axis size."""
+    parts = list(spec) + [None] * (len(shape) - len(spec))
+    out = []
+    for dim, entry in zip(shape, parts):
+        sz = _axis_entry_size(mesh, entry)
+        out.append(entry if (sz > 1 and dim % sz == 0) or sz == 1 else None)
+    return P(*out)
+
+
+def strip_model_axis(spec_tree):
+    """Replace every "model" entry with None (DP-only layout: the model
+    axis of the mesh is used as extra data parallelism instead of TP —
+    the right layout for models too small to shard 16-way)."""
+
+    def one(spec):
+        if not isinstance(spec, P):
+            return spec
+        out = []
+        for e in spec:
+            if e == "model":
+                out.append(None)
+            elif isinstance(e, (tuple, list)):
+                kept = tuple(a for a in e if a != "model")
+                out.append(kept if kept else None)
+            else:
+                out.append(e)
+        return P(*out)
+
+    return jax.tree_util.tree_map(one, spec_tree,
+                                  is_leaf=lambda x: isinstance(x, P))
+
+
+def param_shardings(mesh: Mesh, abstract_params, specs):
+    def one(aps, spec):
+        if not isinstance(spec, P):
+            spec = P()
+        return NamedSharding(mesh, resolve_spec(mesh, spec, aps.shape))
+
+    return jax.tree_util.tree_map(
+        one, abstract_params, specs,
+        is_leaf=lambda x: isinstance(x, (P, jax.ShapeDtypeStruct)))
+
+
+def tree_shardings(mesh: Mesh, spec_tree):
+    return jax.tree_util.tree_map(
+        lambda s: NamedSharding(mesh, s), spec_tree,
+        is_leaf=lambda x: isinstance(x, P))
+
+
+# ---------------------------------------------------------------------------
+# Cache shardings
+# ---------------------------------------------------------------------------
+
+def cache_spec_tree(mesh: Mesh, abstract_cache, batch: int,
+                    d_ax=None, model_size=None):
+    """Heuristic spec per cache leaf based on its shape.
+
+    Rules (post any leading n_periods stacking axis):
+      * a dim equal to the global batch size shards over (pod, data);
+      * among remaining dims, prefer sharding the largest dim divisible
+        by the model-axis size over "model" (KV heads / sequence /
+        feature width all resolve naturally);
+      * everything else replicates.
+    """
+    d_ax = data_axes(mesh) if d_ax is None else d_ax
+    d_sz = axis_size(mesh, d_ax)
+    m_sz = axis_size(mesh, "model") if model_size is None else model_size
+
+    def one(leaf):
+        shape = leaf.shape
+        parts = [None] * len(shape)
+        # batch dim: first dim whose size == batch (skip tiny stacking dims)
+        bdim = None
+        for i, dim in enumerate(shape):
+            if dim == batch:
+                bdim = i
+                break
+        if bdim is not None and d_sz > 1 and batch % d_sz == 0:
+            parts[bdim] = d_ax if len(d_ax) > 1 else d_ax[0]
+        if m_sz > 1:
+            cands = [
+                (dim, i) for i, dim in enumerate(shape)
+                if i != bdim and parts[i] is None and dim % m_sz == 0
+                and dim >= m_sz
+            ]
+            if cands:
+                _, idx = max(cands)
+                parts[idx] = "model"
+        return P(*parts)
+
+    return jax.tree_util.tree_map(one, abstract_cache)
+
+
+def cache_shardings(mesh: Mesh, abstract_cache, batch: int, d_ax=None,
+                    model_size=None):
+    return tree_shardings(mesh, cache_spec_tree(mesh, abstract_cache,
+                                                batch, d_ax, model_size))
+
+
+# ---------------------------------------------------------------------------
+# Batch input shardings
+# ---------------------------------------------------------------------------
+
+def batch_spec(mesh: Mesh, batch_tree, global_batch: int, d_ax=None):
+    d_ax = data_axes(mesh) if d_ax is None else d_ax
+    d_sz = axis_size(mesh, d_ax)
+    entry = d_ax if len(d_ax) > 1 else d_ax[0]
+
+    def one(leaf):
+        shape = leaf.shape
+        parts = [None] * len(shape)
+        for i, dim in enumerate(shape):
+            if dim == global_batch and d_sz > 1 and dim % d_sz == 0:
+                parts[i] = entry
+                break
+        return P(*parts)
+
+    return jax.tree_util.tree_map(one, batch_tree)
+
+
+def batch_shardings(mesh: Mesh, batch_tree, global_batch: int, d_ax=None):
+    return tree_shardings(mesh, batch_spec(mesh, batch_tree, global_batch,
+                                           d_ax))

@@ -1,0 +1,134 @@
+"""Step factories: train_step / prefill_step / decode_step with shardings.
+
+These are the functions the dry-run lowers and the drivers execute. Each
+factory returns (fn, in_shardings, arg_shapes) ready for
+``jax.jit(fn, in_shardings=...).lower(*arg_shapes)``.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.launch import sharding as shd
+from repro.launch.mesh import axis_size, data_axes
+from repro.models import nn
+from repro.models.config import ModelConfig, ShapeConfig
+from repro.models.model_zoo import Model, build_model
+from repro.optim.adamw import AdamW, OptState, opt_state_specs
+
+
+def configure_axes(mesh: Mesh, layout: str = "2d"):
+    """Map logical axes onto the mesh. layout="dp" folds the model axis
+    into data parallelism (for models too small to TP-shard)."""
+    d_ax = data_axes(mesh)
+    if layout == "dp":
+        d_ax = d_ax + ("model",)
+        nn.set_axis_map({"data": d_ax, "model": None})
+    else:
+        nn.set_axis_map({"data": d_ax if len(d_ax) > 1 else d_ax[0],
+                         "model": "model"})
+    return d_ax
+
+
+def make_train_step(model: Model, optimizer: AdamW,
+                    compute_dtype: Optional[str] = "bfloat16"):
+    """compute_dtype="bfloat16": master-weight mixed precision — the
+    loss sees bf16 params, so activations AND the implicit data-parallel
+    gradient all-reduce run in bf16 (half the wire bytes); the optimizer
+    updates the f32 master copies."""
+    from repro.common.tree import tree_cast
+
+    def train_step(params, opt_state, batch):
+        def loss_fn(p):
+            pc = tree_cast(p, jnp.bfloat16) \
+                if compute_dtype == "bfloat16" else p
+            return model.loss(pc, batch)
+
+        (loss, metrics), grads = jax.value_and_grad(
+            loss_fn, has_aux=True)(params)
+        new_params, new_state, om = optimizer.update(grads, opt_state, params)
+        metrics = dict(metrics)
+        metrics.update(om)
+        metrics["loss"] = loss
+        return new_params, new_state, metrics
+
+    return train_step
+
+
+def make_prefill_step(model: Model):
+    def prefill_step(params, cache, batch):
+        return model.prefill(params, cache, **batch)
+
+    return prefill_step
+
+
+def make_decode_step(model: Model):
+    def decode_step(params, tokens, pos, cache):
+        return model.decode_step(params, tokens, pos, cache)
+
+    return decode_step
+
+
+def lowerable(model: Model, shape: ShapeConfig, mesh: Mesh,
+              optimizer: Optional[AdamW] = None, layout: str = "2d",
+              donate_cache: bool = False):
+    """Build (fn, in_shardings, args[, donate]) for a cell.
+
+    layout="dp" folds the mesh's model axis into data parallelism
+    (strip TP from every spec); donate_cache marks the decode cache for
+    buffer donation (in-place KV update on TPU).
+    """
+    d_ax = configure_axes(mesh, layout)
+    cfg = model.cfg
+    aparams = model.abstract_params()
+    pspecs = model.param_specs()
+    m_sz = None
+    if layout == "dp":
+        pspecs = shd.strip_model_axis(pspecs)
+        m_sz = 1
+    pshard = shd.param_shardings(mesh, aparams, pspecs)
+    inputs = model.input_specs(shape)
+
+    if shape.kind == "train":
+        optimizer = optimizer or AdamW()
+        astate = optimizer.abstract_state(aparams)
+        ospecs = opt_state_specs(
+            pspecs, aparams, zero1=True,
+            data_axis=d_ax if len(d_ax) > 1 else d_ax[0],
+            data_size=axis_size(mesh, d_ax))
+        oshard = OptState(
+            m=shd.param_shardings(mesh, astate.m, ospecs.m),
+            v=shd.param_shardings(mesh, astate.v, ospecs.v),
+            step=NamedSharding(mesh, P()))
+        bshard = shd.batch_shardings(mesh, inputs["batch"],
+                                     shape.global_batch, d_ax)
+        fn = make_train_step(model, optimizer)
+        args = (aparams, astate, inputs["batch"])
+        in_shardings = (pshard, oshard, bshard)
+        return fn, in_shardings, args
+
+    if shape.kind == "prefill":
+        cshard = shd.cache_shardings(mesh, inputs["cache"],
+                                     shape.global_batch, d_ax, m_sz)
+        bshard = shd.batch_shardings(mesh, inputs["batch"],
+                                     shape.global_batch, d_ax)
+        fn = make_prefill_step(model)
+        args = (aparams, inputs["cache"], inputs["batch"])
+        in_shardings = (pshard, cshard, bshard)
+        return fn, in_shardings, args
+
+    # decode
+    cshard = shd.cache_shardings(mesh, inputs["cache"], shape.global_batch,
+                                 d_ax, m_sz)
+    tshard = shd.batch_shardings(
+        mesh, {"tokens": inputs["tokens"], "pos": inputs["pos"]},
+        shape.global_batch, d_ax)
+    fn = make_decode_step(model)
+    args = (aparams, inputs["tokens"], inputs["pos"], inputs["cache"])
+    in_shardings = (pshard, tshard["tokens"], tshard["pos"], cshard)
+    return fn, in_shardings, args

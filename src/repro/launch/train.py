@@ -1,0 +1,136 @@
+"""Training driver: Perona-aware fault-tolerant LM training.
+
+    PYTHONPATH=src python -m repro.launch.train --arch smollm-135m \
+        --steps 200 --batch 8 --seq 256 --scale small
+
+Flow (the production story of DESIGN.md §2):
+  1. fingerprint the cluster hosts with the standardized suite and rank
+     them (Perona) — degraded hosts are excluded before mesh build;
+  2. build the (data, model) mesh from surviving hosts;
+  3. run the fault-tolerant step loop (checkpoint/restart, straggler
+     monitor routed through the Perona watchdog);
+  4. deterministic data pipeline (batch = f(seed, step)) makes restarts
+     exactly-once.
+
+On this CPU container the mesh is 1 device and hosts are virtual; the
+same driver lowers unchanged onto the production meshes (dry-run proves
+it for every assigned architecture).
+"""
+
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import time
+from pathlib import Path
+
+import jax
+import numpy as np
+
+from repro.checkpointing.manager import CheckpointManager
+from repro.configs import get_config
+from repro.core.graph_data import build_graphs, chronological_split
+from repro.core.model import PeronaConfig, PeronaModel
+from repro.core.preprocess import Preprocessor
+from repro.core.ranking import aspect_scores, rank_machines
+from repro.core.trainer import batch_to_jnp, train_perona
+from repro.data.tokens import TokenPipeline
+from repro.fingerprint.runner import SuiteRunner
+from repro.models.model_zoo import build_model
+from repro.optim.adamw import AdamW
+from repro.optim.schedule import cosine_schedule
+from repro.runtime.fault import FailureInjector, TrainingRuntime
+from repro.runtime.straggler import StragglerMonitor
+from repro.runtime.watchdog import PeronaWatchdog
+
+
+def fingerprint_cluster(machines, *, seed=0, epochs=40, runs_per_type=8):
+    """Rank cluster nodes with Perona; returns (watchdog, ranked_nodes)."""
+    runner = SuiteRunner(seed=seed)
+    records = runner.run(machines, runs_per_type=runs_per_type)
+    train_r, val_r, _ = chronological_split(records, (0.7, 0.3, 0.0))
+    pre = Preprocessor().fit(train_r)
+    tb, vb = build_graphs(train_r, pre), build_graphs(val_r, pre)
+    pcfg = PeronaConfig(feature_dim=pre.feature_dim,
+                        edge_dim=tb.edge.shape[-1])
+    pmodel = PeronaModel(pcfg)
+    res = train_perona(pmodel, tb, vb, epochs=epochs, seed=seed)
+    full = build_graphs(records, pre)
+    out = pmodel.forward(res.params, batch_to_jnp(full), train=False)
+    scores = aspect_scores(np.asarray(out["codes"]),
+                           [r.benchmark_type for r in records],
+                           [r.machine for r in records])
+    ranked = rank_machines(scores)
+    watchdog = PeronaWatchdog(pmodel, res.params, pre)
+    watchdog.history = list(records)
+    return watchdog, ranked, runner
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="smollm-135m")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=256)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--scale", choices=["full", "small"], default="small")
+    ap.add_argument("--ckpt-dir", default="artifacts/ckpt")
+    ap.add_argument("--checkpoint-every", type=int, default=20)
+    ap.add_argument("--hosts", type=int, default=4)
+    ap.add_argument("--fail-at", type=int, default=0,
+                    help="inject a host failure at this step (0 = none)")
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch)
+    if args.scale == "small":
+        cfg = cfg.scaled_down(max_seq=args.seq)
+    model = build_model(cfg)
+
+    # --- 1. Perona: fingerprint + rank the cluster ----------------------
+    machines = {f"host-{i}": "n2-standard-4" for i in range(args.hosts)}
+    t0 = time.time()
+    watchdog, ranked, runner = fingerprint_cluster(machines, seed=args.seed)
+    print(f"[perona] cluster ranked in {time.time()-t0:.1f}s: {ranked}")
+
+    # --- 2/3. fault-tolerant training loop ------------------------------
+    opt = AdamW(lr=cosine_schedule(args.lr, 10, args.steps))
+    pipeline = TokenPipeline(cfg.vocab_size, args.seq, args.batch,
+                             seed=args.seed)
+
+    def init_state(hosts):
+        params = model.init(jax.random.PRNGKey(args.seed))
+        return {"params": params, "opt": opt.init(params)}
+
+    @jax.jit
+    def _step(params, opt_state, batch):
+        (loss, metrics), grads = jax.value_and_grad(
+            model.loss, has_aux=True)(params, batch)
+        params, opt_state, om = opt.update(grads, opt_state, params)
+        return params, opt_state, loss
+
+    def train_step(state, batch, hosts):
+        params, opt_state, loss = _step(state["params"], state["opt"],
+                                        batch)
+        return {"params": params, "opt": opt_state}, {"loss": float(loss)}
+
+    injector = FailureInjector(
+        {args.fail_at: ["host-1"]} if args.fail_at else None)
+    rt = TrainingRuntime(
+        hosts=list(machines), train_step=train_step, init_state=init_state,
+        pipeline=pipeline,
+        ckpt=CheckpointManager(Path(args.ckpt_dir) / args.arch),
+        checkpoint_every=args.checkpoint_every,
+        failure_injector=injector, watchdog=watchdog, suite_runner=runner,
+        machines=machines, straggler_monitor=StragglerMonitor())
+    result = rt.run(args.steps)
+    losses = result["losses"]
+    print(f"[train] steps={len(losses)} loss {losses[0]:.3f} -> "
+          f"{np.mean(losses[-5:]):.3f}; restarts={result['restarts']}; "
+          f"hosts={result['final_hosts']}")
+    for ev in result["events"]:
+        print(f"[event] step={ev.step} {ev.kind}: {ev.detail}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,6 @@
+"""Model zoo: unified LM stack covering all assigned architectures."""
+
+from repro.models.config import ModelConfig, MoEConfig, MLAConfig
+from repro.models.model_zoo import build_model
+
+__all__ = ["ModelConfig", "MoEConfig", "MLAConfig", "build_model"]

@@ -1,0 +1,476 @@
+"""Attention: GQA/MQA, sliding-window, MLA (DeepSeek), cross-attention.
+
+Three compute paths:
+  * "full"    — materialize (S, T) scores; used for short sequences/tests.
+  * "chunked" — lax.scan over query chunks (memory-efficient attention);
+                sliding-window layers slice only a (chunk+window) K span,
+                so local attention is O(S * window).
+  * "pallas"  — repro.kernels.flash_attention (TPU target; validated in
+                interpret mode in tests).
+
+KV caches:
+  * full layers   — (B, T_max, KH, hd) K/V written at absolute positions.
+  * local layers  — ring buffer (B, W, KH, hd) + slot position array.
+  * MLA           — compressed (B, T, kv_lora) + (B, T, rope_dim) cache and
+                    an absorbed decode path (the DeepSeek-V2 inference
+                    optimization).
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import nn
+from repro.models.config import ModelConfig
+
+NEG_INF = -2.3819763e38  # large negative for masking in fp32
+
+
+# ---------------------------------------------------------------------------
+# Parameter initialization
+# ---------------------------------------------------------------------------
+
+def attention_init(init: nn.Init, cfg: ModelConfig, cross: bool = False):
+    """Standard (non-MLA) attention parameters."""
+    d, H, KH, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    # shard kv heads on "model" only if divisible by a typical TP degree;
+    # the launcher re-checks divisibility and may replicate instead.
+    params, specs = {}, {}
+
+    def proj(name, shape, spec, bias_len=0):
+        w, ws = init.param(shape, spec, scale=nn.fanin_scale(shape[0]))
+        params[name] = {"w": w}
+        specs[name] = {"w": ws}
+        if cfg.qkv_bias and bias_len:
+            b, bs = init.param((bias_len,), (None,), mode="zeros")
+            params[name]["b"] = b
+            specs[name]["b"] = bs
+
+    proj("wq", (d, H * hd), (None, "model"), H * hd)
+    proj("wk", (d, KH * hd), (None, "model"), KH * hd)
+    proj("wv", (d, KH * hd), (None, "model"), KH * hd)
+    w, ws = init.param((H * hd, d), ("model", None), scale=nn.fanin_scale(H * hd))
+    params["wo"] = {"w": w}
+    specs["wo"] = {"w": ws}
+    if cfg.qk_norm:
+        for nm in ("q_norm", "k_norm"):
+            p, s = nn.norm_init(init, "rmsnorm", hd)
+            params[nm], specs[nm] = p, s
+    return params, specs
+
+
+def mla_init(init: nn.Init, cfg: ModelConfig):
+    """DeepSeek-V2 Multi-head Latent Attention parameters."""
+    m = cfg.mla
+    d, H = cfg.d_model, cfg.n_heads
+    qk_dim = m.qk_nope_head_dim + m.qk_rope_head_dim
+    params, specs = {}, {}
+
+    def proj(name, shape, spec):
+        w, ws = init.param(shape, spec, scale=nn.fanin_scale(shape[0]))
+        params[name] = {"w": w}
+        specs[name] = {"w": ws}
+
+    proj("wq", (d, H * qk_dim), (None, "model"))
+    # joint down-projection: compressed kv + decoupled rope key
+    proj("w_dkv", (d, m.kv_lora_rank + m.qk_rope_head_dim), (None, None))
+    p, s = nn.norm_init(init, "rmsnorm", m.kv_lora_rank)
+    params["kv_norm"], specs["kv_norm"] = p, s
+    proj("w_uk", (m.kv_lora_rank, H * m.qk_nope_head_dim), (None, "model"))
+    proj("w_uv", (m.kv_lora_rank, H * m.v_head_dim), (None, "model"))
+    proj("wo", (H * m.v_head_dim, d), ("model", None))
+    return params, specs
+
+
+# ---------------------------------------------------------------------------
+# Core attend: q (B,S,H,hd) x k/v (B,T,KH,hd) with GQA + masking
+# ---------------------------------------------------------------------------
+
+def _gqa_scores(q, k, scale):
+    B, S, H, hd = q.shape
+    KH = k.shape[2]
+    G = H // KH
+    qg = q.reshape(B, S, KH, G, hd)
+    return jnp.einsum("bskgd,btkd->bkgst", qg, k) * scale  # (B,KH,G,S,T)
+
+
+def _gqa_values(probs, v):
+    B, KH, G, S, T = probs.shape
+    out = jnp.einsum("bkgst,btkd->bskgd", probs, v)
+    return out.reshape(B, S, KH * G, -1)
+
+
+def _softmax(scores, mask, softcap: float):
+    s = scores.astype(jnp.float32)
+    if softcap > 0.0:
+        s = jnp.tanh(s / softcap) * softcap
+    s = jnp.where(mask, s, NEG_INF)
+    m = jnp.max(s, -1, keepdims=True)
+    e = jnp.exp(s - jax.lax.stop_gradient(m))
+    denom = jnp.sum(e, -1, keepdims=True)
+    return e / jnp.maximum(denom, 1e-30)
+
+
+def attend_full(q, k, v, q_pos, k_pos, *, causal: bool, window: int,
+                scale: float, softcap: float = 0.0):
+    """Materialized-scores attention. positions: (B,S)/(B,T) absolute."""
+    scores = _gqa_scores(q, k, scale)  # (B,KH,G,S,T)
+    rel = q_pos[:, None, None, :, None] - k_pos[:, None, None, None, :]
+    mask = k_pos[:, None, None, None, :] >= 0  # negative pos = invalid slot
+    if causal:
+        mask &= rel >= 0
+    if window > 0:
+        mask &= rel < window
+    probs = _softmax(scores, mask, softcap)
+    return _gqa_values(probs.astype(v.dtype), v)
+
+
+def attend_chunked(q, k, v, q_pos, k_pos, *, causal: bool, window: int,
+                   scale: float, softcap: float = 0.0, chunk: int = 1024,
+                   causal_skip: bool = True,
+                   max_unrolled_chunks: int = 32):
+    """Query-chunked attention (memory-efficient).
+
+    Chunks are *unrolled* (python loop, static shapes) up to
+    max_unrolled_chunks — XLA's cost analysis counts while-loop bodies
+    once, so an inner scan would hide attention FLOPs from the roofline.
+    Per chunk the K span is:
+      * sliding-window: the static (chunk + window) slice — O(S*window);
+      * causal + causal_skip: the growing static prefix (skips the
+        masked upper triangle — halves score/AV FLOPs; §Perf);
+      * otherwise: full K (mask only; the paper-faithful baseline path).
+    Beyond max_unrolled_chunks a lax.scan with full-K chunks is used.
+    """
+    B, S, H, hd = q.shape
+    if S % chunk != 0:
+        return attend_full(q, k, v, q_pos, k_pos, causal=causal,
+                           window=window, scale=scale, softcap=softcap)
+    n_chunks = S // chunk
+    qc = q.reshape(B, n_chunks, chunk, H, hd)
+    qp = q_pos.reshape(B, n_chunks, chunk)
+    T = k.shape[1]
+    use_span = window > 0 and causal and (chunk + window) <= T
+    span = chunk + window if use_span else T
+    same_seq = T == S
+
+    if n_chunks <= max_unrolled_chunks:
+        outs = []
+        for i in range(n_chunks):
+            if use_span and same_seq:
+                lo = max(i * chunk - window, 0)
+                hi = (i + 1) * chunk
+            elif causal and causal_skip and same_seq:
+                lo, hi = 0, (i + 1) * chunk
+            else:
+                lo, hi = 0, T
+            o_i = attend_full(qc[:, i], k[:, lo:hi], v[:, lo:hi],
+                              qp[:, i], k_pos[:, lo:hi], causal=causal,
+                              window=window, scale=scale, softcap=softcap)
+            outs.append(o_i)
+        out = jnp.stack(outs, axis=1)
+        return out.reshape(B, S, H, v.shape[-1])
+
+    def body(_, inputs):
+        i, q_i, qp_i = inputs
+        if use_span:
+            start = jnp.maximum(i * chunk - window, 0)
+            start = jnp.minimum(start, T - span)
+            k_i = jax.lax.dynamic_slice_in_dim(k, start, span, 1)
+            v_i = jax.lax.dynamic_slice_in_dim(v, start, span, 1)
+            kp_i = jax.lax.dynamic_slice_in_dim(k_pos, start, span, 1)
+        else:
+            k_i, v_i, kp_i = k, v, k_pos
+        o_i = attend_full(q_i, k_i, v_i, qp_i, kp_i, causal=causal,
+                          window=window, scale=scale, softcap=softcap)
+        return None, o_i
+
+    idx = jnp.arange(n_chunks)
+    _, out = jax.lax.scan(
+        body, None,
+        (idx, jnp.moveaxis(qc, 1, 0), jnp.moveaxis(qp, 1, 0)),
+    )
+    # value head dim may differ from the query head dim (MLA)
+    return jnp.moveaxis(out, 0, 1).reshape(B, S, H, v.shape[-1])
+
+
+def attend(q, k, v, q_pos, k_pos, *, causal, window, scale, softcap=0.0,
+           impl: str = "reference", causal_skip: bool = True):
+    big = q.shape[1] > 2048
+    if impl == "pallas" and q.shape[1] == k.shape[1] and causal:
+        from repro.kernels.flash_attention import ops as fa_ops
+
+        return fa_ops.flash_attention(q, k, v, causal=True, window=window,
+                                      scale=scale)
+    if big:
+        return attend_chunked(q, k, v, q_pos, k_pos, causal=causal,
+                              window=window, scale=scale, softcap=softcap,
+                              causal_skip=causal_skip)
+    return attend_full(q, k, v, q_pos, k_pos, causal=causal, window=window,
+                       scale=scale, softcap=softcap)
+
+
+# ---------------------------------------------------------------------------
+# Standard attention block (GQA; full or sliding-window; optional cache)
+# ---------------------------------------------------------------------------
+
+def init_kv_cache(cfg: ModelConfig, batch: int, length: int, local: bool,
+                  dtype=jnp.bfloat16):
+    """Cache pytree for one attention layer. With cfg.kv_quant, K/V are
+    int8 with per-(slot, head) scales (half the HBM bytes per read)."""
+    W = min(cfg.local_window, length) if local else length
+    KH, hd = cfg.n_kv_heads, cfg.head_dim
+    cache = {
+        # absolute position held by each slot; -1 = empty
+        "pos": jnp.full((batch, W), -1, jnp.int32),
+    }
+    if cfg.kv_quant:
+        cache.update({
+            "k": jnp.zeros((batch, W, KH, hd), jnp.int8),
+            "v": jnp.zeros((batch, W, KH, hd), jnp.int8),
+            "k_scale": jnp.zeros((batch, W, KH), jnp.bfloat16),
+            "v_scale": jnp.zeros((batch, W, KH), jnp.bfloat16),
+        })
+    else:
+        cache.update({
+            "k": jnp.zeros((batch, W, KH, hd), dtype),
+            "v": jnp.zeros((batch, W, KH, hd), dtype),
+        })
+    return cache
+
+
+def _quantize_kv(x):
+    """x: (..., hd) -> (int8 values, scale (...,))."""
+    xf = x.astype(jnp.float32)
+    scale = jnp.max(jnp.abs(xf), axis=-1) / 127.0
+    scale = jnp.maximum(scale, 1e-8)
+    q = jnp.clip(jnp.round(xf / scale[..., None]), -127, 127)
+    return q.astype(jnp.int8), scale.astype(jnp.bfloat16)
+
+
+def _dequantize_kv(q, scale, dtype):
+    return (q.astype(jnp.float32)
+            * scale.astype(jnp.float32)[..., None]).astype(dtype)
+
+
+def _project_qkv(params, cfg: ModelConfig, x, positions):
+    B, S, _ = x.shape
+    H, KH, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    q = nn.linear(params["wq"], x).reshape(B, S, H, hd)
+    k = nn.linear(params["wk"], x).reshape(B, S, KH, hd)
+    v = nn.linear(params["wv"], x).reshape(B, S, KH, hd)
+    if cfg.qk_norm:
+        q = nn.apply_norm(params["q_norm"], "rmsnorm", q)
+        k = nn.apply_norm(params["k_norm"], "rmsnorm", k)
+    if cfg.rope_style == "rope":
+        q = nn.apply_rope(q, positions, cfg.rope_theta)
+        k = nn.apply_rope(k, positions, cfg.rope_theta)
+    elif cfg.rope_style == "mrope":
+        # positions: (3, B, S) for mrope models; (B, S) falls back to rope
+        if positions.ndim == 3:
+            q = nn.apply_mrope(q, positions, cfg.rope_theta)
+            k = nn.apply_mrope(k, positions, cfg.rope_theta)
+        else:
+            q = nn.apply_rope(q, positions, cfg.rope_theta)
+            k = nn.apply_rope(k, positions, cfg.rope_theta)
+    return q, k, v
+
+
+def _attn_scale(cfg: ModelConfig) -> float:
+    if cfg.attention_multiplier > 0:
+        return cfg.attention_multiplier
+    return 1.0 / math.sqrt(cfg.head_dim)
+
+
+def attention_block(params, cfg: ModelConfig, x, positions, *, local: bool,
+                    mode: str = "train", cache=None, causal: bool = True):
+    """Returns (output, new_cache). positions: (B,S) or (3,B,S) absolute."""
+    B, S, _ = x.shape
+    pos2d = positions[0] if positions.ndim == 3 else positions
+    q, k, v = _project_qkv(params, cfg, x, positions)
+    window = cfg.local_window if local else 0
+    scale = _attn_scale(cfg)
+    new_cache = cache
+
+    quant = cache is not None and "k_scale" in cache
+    if mode in ("train", "prefill"):
+        out = attend(q, k, v, pos2d, pos2d, causal=causal, window=window,
+                     scale=scale, softcap=cfg.attn_logit_softcap,
+                     impl=cfg.attn_impl, causal_skip=cfg.causal_skip)
+        if mode == "prefill" and cache is not None:
+            W = cache["k"].shape[1]
+            if W >= S:
+                kpad = jnp.pad(k, ((0, 0), (0, W - S), (0, 0), (0, 0)))
+                vpad = jnp.pad(v, ((0, 0), (0, W - S), (0, 0), (0, 0)))
+                ppad = jnp.pad(pos2d, ((0, 0), (0, W - S)),
+                               constant_values=-1)
+            else:  # keep last W entries (ring semantics preserved below)
+                sl = lambda a: a[:, S - W:]
+                kpad, vpad, ppad = sl(k), sl(v), sl(pos2d)
+            if quant:
+                kq, ks = _quantize_kv(kpad)
+                vq, vs = _quantize_kv(vpad)
+                new_cache = {"k": kq, "v": vq, "k_scale": ks,
+                             "v_scale": vs, "pos": ppad}
+            else:
+                new_cache = {"k": kpad.astype(cache["k"].dtype),
+                             "v": vpad.astype(cache["v"].dtype),
+                             "pos": ppad}
+    elif mode == "decode":
+        assert cache is not None and S == 1
+        W = cache["k"].shape[1]
+        slot = jnp.mod(pos2d[:, 0], W)  # (B,)
+        bidx = jnp.arange(B)
+        if quant:
+            kq, ks = _quantize_kv(k[:, 0])
+            vq, vs = _quantize_kv(v[:, 0])
+            new_cache = {
+                "k": cache["k"].at[bidx, slot].set(kq),
+                "v": cache["v"].at[bidx, slot].set(vq),
+                "k_scale": cache["k_scale"].at[bidx, slot].set(ks),
+                "v_scale": cache["v_scale"].at[bidx, slot].set(vs),
+                "pos": cache["pos"].at[bidx, slot].set(pos2d[:, 0]),
+            }
+            ck = _dequantize_kv(new_cache["k"], new_cache["k_scale"],
+                                q.dtype)
+            cv = _dequantize_kv(new_cache["v"], new_cache["v_scale"],
+                                q.dtype)
+            cp = new_cache["pos"]
+        else:
+            ck = cache["k"].at[bidx, slot].set(
+                k[:, 0].astype(cache["k"].dtype))
+            cv = cache["v"].at[bidx, slot].set(
+                v[:, 0].astype(cache["v"].dtype))
+            cp = cache["pos"].at[bidx, slot].set(pos2d[:, 0])
+            new_cache = {"k": ck, "v": cv, "pos": cp}
+            ck = ck.astype(q.dtype)
+            cv = cv.astype(q.dtype)
+        out = attend_full(q, ck, cv, pos2d, cp, causal=True, window=window,
+                          scale=scale, softcap=cfg.attn_logit_softcap)
+    else:  # pragma: no cover
+        raise ValueError(mode)
+
+    out = out.reshape(B, S, cfg.n_heads * cfg.head_dim)
+    return nn.linear(params["wo"], out), new_cache
+
+
+def attention_block_bidirectional(params, cfg: ModelConfig, x, positions):
+    """Encoder self-attention (no mask beyond validity, no cache)."""
+    return attention_block(params, cfg, x, positions, local=False,
+                           mode="train", cache=None, causal=False)
+
+
+# ---------------------------------------------------------------------------
+# Cross-attention (whisper decoder)
+# ---------------------------------------------------------------------------
+
+def cross_attention_block(params, cfg: ModelConfig, x, enc_kv):
+    """enc_kv: dict with precomputed k/v (B,T,KH,hd) from encoder output."""
+    B, S, _ = x.shape
+    H, hd = cfg.n_heads, cfg.head_dim
+    q = nn.linear(params["wq"], x).reshape(B, S, H, hd)
+    k, v = enc_kv["k"], enc_kv["v"]
+    T = k.shape[1]
+    q_pos = jnp.broadcast_to(jnp.arange(S), (B, S))
+    k_pos = jnp.broadcast_to(jnp.arange(T), (B, T))
+    out = attend(q, k.astype(q.dtype), v.astype(q.dtype), q_pos, k_pos,
+                 causal=False, window=0, scale=_attn_scale(cfg))
+    out = out.reshape(B, S, H * hd)
+    return nn.linear(params["wo"], out)
+
+
+def encode_cross_kv(params, cfg: ModelConfig, enc_out):
+    B, T, _ = enc_out.shape
+    KH, hd = cfg.n_kv_heads, cfg.head_dim
+    k = nn.linear(params["wk"], enc_out).reshape(B, T, KH, hd)
+    v = nn.linear(params["wv"], enc_out).reshape(B, T, KH, hd)
+    return {"k": k, "v": v}
+
+
+# ---------------------------------------------------------------------------
+# MLA (DeepSeek-V2) attention block
+# ---------------------------------------------------------------------------
+
+def init_mla_cache(cfg: ModelConfig, batch: int, length: int,
+                   dtype=jnp.bfloat16):
+    m = cfg.mla
+    return {
+        "ckv": jnp.zeros((batch, length, m.kv_lora_rank), dtype),
+        "krope": jnp.zeros((batch, length, m.qk_rope_head_dim), dtype),
+        "pos": jnp.full((batch, length), -1, jnp.int32),
+    }
+
+
+def mla_block(params, cfg: ModelConfig, x, positions, *, mode="train",
+              cache=None):
+    m = cfg.mla
+    B, S, _ = x.shape
+    H = cfg.n_heads
+    pos2d = positions[0] if positions.ndim == 3 else positions
+    qk_dim = m.qk_nope_head_dim + m.qk_rope_head_dim
+    scale = 1.0 / math.sqrt(qk_dim)
+
+    q = nn.linear(params["wq"], x).reshape(B, S, H, qk_dim)
+    q_nope, q_rope = jnp.split(q, [m.qk_nope_head_dim], axis=-1)
+    q_rope = nn.apply_rope(q_rope, pos2d, cfg.rope_theta)
+
+    dkv = nn.linear(params["w_dkv"], x)  # (B,S,rank+rope)
+    ckv, k_rope = jnp.split(dkv, [m.kv_lora_rank], axis=-1)
+    ckv = nn.apply_norm(params["kv_norm"], "rmsnorm", ckv)
+    k_rope = nn.apply_rope(k_rope[:, :, None, :], pos2d, cfg.rope_theta)[
+        :, :, 0, :
+    ]
+
+    new_cache = cache
+    if mode == "decode":
+        assert cache is not None and S == 1
+        T = cache["ckv"].shape[1]
+        slot = jnp.mod(pos2d[:, 0], T)
+        bidx = jnp.arange(B)
+        ckv_all = cache["ckv"].at[bidx, slot].set(
+            ckv[:, 0].astype(cache["ckv"].dtype))
+        krope_all = cache["krope"].at[bidx, slot].set(
+            k_rope[:, 0].astype(cache["krope"].dtype))
+        pos_all = cache["pos"].at[bidx, slot].set(pos2d[:, 0])
+        new_cache = {"ckv": ckv_all, "krope": krope_all, "pos": pos_all}
+        # absorbed decode: score = q_nope @ W_uk^T @ ckv + q_rope @ k_rope
+        wuk = params["w_uk"]["w"].astype(x.dtype).reshape(
+            m.kv_lora_rank, H, m.qk_nope_head_dim)
+        q_abs = jnp.einsum("bshd,rhd->bshr", q_nope, wuk)  # (B,1,H,rank)
+        sc = jnp.einsum("bshr,btr->bhst", q_abs,
+                        ckv_all.astype(x.dtype)) * scale
+        sc += jnp.einsum("bshd,btd->bhst", q_rope,
+                         krope_all.astype(x.dtype)) * scale
+        rel = pos2d[:, None, :, None] - pos_all[:, None, None, :]
+        mask = (pos_all[:, None, None, :] >= 0) & (rel >= 0)
+        probs = _softmax(sc, mask, 0.0).astype(x.dtype)
+        ctx = jnp.einsum("bhst,btr->bshr", probs, ckv_all.astype(x.dtype))
+        wuv = params["w_uv"]["w"].astype(x.dtype).reshape(
+            m.kv_lora_rank, H, m.v_head_dim)
+        out = jnp.einsum("bshr,rhv->bshv", ctx, wuv)
+    else:
+        if mode == "prefill" and cache is not None:
+            T = cache["ckv"].shape[1]
+            pad = lambda a: jnp.pad(
+                a, ((0, 0), (0, T - S)) + ((0, 0),) * (a.ndim - 2))
+            new_cache = {
+                "ckv": pad(ckv).astype(cache["ckv"].dtype),
+                "krope": pad(k_rope).astype(cache["krope"].dtype),
+                "pos": jnp.pad(pos2d, ((0, 0), (0, T - S)),
+                               constant_values=-1),
+            }
+        k_nope = nn.linear(params["w_uk"], ckv).reshape(
+            B, S, H, m.qk_nope_head_dim)
+        v = nn.linear(params["w_uv"], ckv).reshape(B, S, H, m.v_head_dim)
+        k_full = jnp.concatenate(
+            [k_nope, jnp.broadcast_to(k_rope[:, :, None, :],
+                                      (B, S, H, m.qk_rope_head_dim))], -1)
+        q_full = jnp.concatenate([q_nope, q_rope], -1)
+        out = attend(q_full, k_full, v, pos2d, pos2d, causal=True, window=0,
+                     scale=scale, impl=cfg.attn_impl,
+                     causal_skip=cfg.causal_skip)
+    out = out.reshape(B, S, H * m.v_head_dim)
+    return nn.linear(params["wo"], out), new_cache

@@ -1,0 +1,101 @@
+"""Public model API: build a model bundle from a ModelConfig.
+
+A ``Model`` exposes pure functions (init / loss / prefill / decode /
+cache) plus input_specs() producing ShapeDtypeStruct stand-ins for the
+dry-run, and the parameter PartitionSpec tree for pjit.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import transformer as tfm
+from repro.models.config import ModelConfig, ShapeConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class Model:
+    cfg: ModelConfig
+
+    # ---------------------------------------------------------------- init
+    def init(self, key) -> Dict:
+        params, _ = tfm.model_init(self.cfg, key)
+        return params
+
+    def param_specs(self) -> Dict:
+        _, specs = tfm.model_init(self.cfg, None, abstract=True)
+        return specs
+
+    def abstract_params(self):
+        shapes, _ = tfm.model_init(self.cfg, None, abstract=True)
+        return shapes
+
+    # --------------------------------------------------------------- steps
+    def loss(self, params, batch) -> Tuple[jnp.ndarray, Dict]:
+        return tfm.loss_fn(params, self.cfg, batch)
+
+    def prefill(self, params, cache, **inputs):
+        return tfm.prefill(params, self.cfg, cache, **inputs)
+
+    def decode_step(self, params, tokens, pos, cache):
+        return tfm.decode_step(params, self.cfg, tokens, pos, cache)
+
+    def init_cache(self, batch: int, length: int, dtype=jnp.bfloat16):
+        return tfm.model_cache(self.cfg, batch, length, dtype)
+
+    def abstract_cache(self, batch: int, length: int, dtype=jnp.bfloat16):
+        return jax.eval_shape(
+            lambda: tfm.model_cache(self.cfg, batch, length, dtype))
+
+    # -------------------------------------------------------------- inputs
+    def input_specs(self, shape: ShapeConfig) -> Dict[str, Any]:
+        """ShapeDtypeStruct stand-ins for every model input of a cell.
+
+        train  -> kwargs for loss(params, batch)
+        prefill-> kwargs for prefill(params, cache, **...)
+        decode -> (tokens, pos) for decode_step
+        """
+        cfg = self.cfg
+        B = shape.global_batch
+        S = shape.seq_len
+        i32 = jnp.int32
+        f = jnp.dtype(cfg.dtype)
+        sds = jax.ShapeDtypeStruct
+
+        def token_batch(seq):
+            batch = {"labels": sds((B, seq), i32)}
+            if cfg.family == "vlm":
+                # stub patch/text frontend: precomputed embeddings + M-RoPE
+                batch["embeddings"] = sds((B, seq, cfg.d_model), f)
+                batch["positions"] = sds((3, B, seq), i32)
+            else:
+                batch["tokens"] = sds((B, seq), i32)
+            if cfg.family == "audio":
+                batch["frames"] = sds((B, cfg.n_audio_frames, cfg.d_model), f)
+            return batch
+
+        if shape.kind == "train":
+            return {"batch": token_batch(S)}
+        if shape.kind == "prefill":
+            batch = token_batch(S)
+            batch.pop("labels")
+            if "embeddings" in batch:
+                pass
+            else:
+                batch["tokens"] = sds((B, S), i32)
+            return {"batch": batch,
+                    "cache": self.abstract_cache(B, S)}
+        # decode
+        return {
+            "tokens": sds((B, 1), i32),
+            "pos": sds((B,), i32),
+            "cache": self.abstract_cache(B, S),
+        }
+
+
+def build_model(cfg: ModelConfig) -> Model:
+    return Model(cfg)

@@ -1,0 +1,188 @@
+"""Mixture-of-Experts feed-forward with GSPMD-friendly dispatch.
+
+Design (GShard/Switch-style, adapted for a (data, model) mesh):
+
+  tokens (B, S, D) — B sharded on "data" — are treated as B groups; each
+  group dispatches its own tokens into a per-group expert buffer
+  (B, E, C, D) via capacity-limited scatter. Expert weights are sharded
+  on "model" (expert parallelism), so the expert einsum partitions the E
+  axis; the combine contraction over E induces a single psum over
+  "model" — the same collective cost shape as a tensor-parallel FFN.
+
+  Capacity C = ceil(cf * S * top_k / E), rounded up to a multiple of 8.
+  Overflowing tokens are dropped (scatter mode "drop"), standard for
+  capacity-based TPU MoE; the capacity_factor controls the drop rate.
+"""
+
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import nn
+from repro.models.config import ModelConfig, MoEConfig
+
+
+def _capacity(moe: MoEConfig, tokens_per_group: int) -> int:
+    c = int(moe.capacity_factor * tokens_per_group * moe.top_k / moe.n_experts)
+    return max(8, (c + 7) // 8 * 8)
+
+
+def moe_init(init: nn.Init, cfg: ModelConfig):
+    moe = cfg.moe
+    d = cfg.d_model
+    params, specs = {}, {}
+    w, ws = init.param((d, moe.n_experts), (None, None),
+                       scale=nn.fanin_scale(d))
+    params["router"] = {"w": w}
+    specs["router"] = {"w": ws}
+    # experts: gated MLP, stacked on leading expert axis (sharded "model")
+    wi, wis = init.param((moe.n_experts, d, 2, moe.expert_d_ff),
+                         ("model", None, None, None),
+                         scale=nn.fanin_scale(d))
+    wo, wos = init.param((moe.n_experts, moe.expert_d_ff, d),
+                         ("model", None, None),
+                         scale=nn.fanin_scale(moe.expert_d_ff))
+    params["experts"] = {"wi": wi, "wo": wo}
+    specs["experts"] = {"wi": wis, "wo": wos}
+    if moe.n_shared_experts:
+        shared_ff = moe.shared_d_ff or moe.n_shared_experts * moe.expert_d_ff
+        p, s = nn.mlp_init(init, "swiglu", d, shared_ff)
+        params["shared"], specs["shared"] = p, s
+    return params, specs
+
+
+def router_topk(params, moe: MoEConfig, x) -> Tuple[jnp.ndarray, jnp.ndarray,
+                                                    jnp.ndarray]:
+    """Returns (weights (B,S,K), expert_ids (B,S,K), aux_loss scalar)."""
+    logits = jnp.einsum(
+        "bsd,de->bse", x.astype(jnp.float32),
+        params["router"]["w"].astype(jnp.float32))
+    probs = jax.nn.softmax(logits, -1)
+    weights, ids = jax.lax.top_k(probs, moe.top_k)
+    weights = weights / jnp.maximum(
+        jnp.sum(weights, -1, keepdims=True), 1e-9)
+    # load-balancing auxiliary loss (Switch-style)
+    E = moe.n_experts
+    density = jnp.mean(
+        jax.nn.one_hot(ids, E, dtype=jnp.float32).sum(-2), axis=(0, 1))
+    density_proxy = jnp.mean(probs, axis=(0, 1))
+    aux = jnp.sum(density * density_proxy) * E * moe.router_aux_weight
+    return weights, ids, aux
+
+
+def moe_apply(params, cfg: ModelConfig, x):
+    """x: (B, S, D) -> (out (B,S,D), aux_loss)."""
+    if cfg.moe.impl == "einsum":
+        return moe_apply_einsum(params, cfg, x)
+    return moe_apply_scatter(params, cfg, x)
+
+
+def moe_apply_einsum(params, cfg: ModelConfig, x):
+    """GShard-style einsum dispatch with group-local capacity.
+
+    Tokens are reshaped to (G, g, D) groups (G sharded on "data"); the
+    dispatch/combine one-hots are (G, g, E, C) built group-locally, so
+    the dispatch einsum needs no communication, and the combine einsum
+    contracts the "model"-sharded expert axis -> one psum of (G, g, D)
+    per layer (the same collective shape as a tensor-parallel FFN).
+    """
+    moe = cfg.moe
+    B, S, D = x.shape
+    E, K = moe.n_experts, moe.top_k
+    g = min(moe.group_size, S)
+    assert (B * S) % g == 0, (B, S, g)
+    G = B * S // g
+    C = _capacity(moe, g)
+
+    weights, ids, aux = router_topk(params, moe, x)  # (B,S,K)
+    xg = x.reshape(G, g, D)
+    idg = ids.reshape(G, g, K)
+    wg = weights.reshape(G, g, K)
+
+    onehot_e = jax.nn.one_hot(idg, E, dtype=jnp.int32)  # (G,g,K,E)
+    # position of each choice within its expert, group-locally
+    cum = jnp.cumsum(onehot_e.reshape(G, g * K, E), axis=1).reshape(
+        G, g, K, E)
+    pos = jnp.sum(cum * onehot_e, axis=-1) - 1  # (G,g,K) in [0, g*K)
+    keep = pos < C
+    pos = jnp.clip(pos, 0, C - 1)
+    onehot_c = jax.nn.one_hot(pos, C, dtype=x.dtype) * keep[..., None]
+
+    dispatch = jnp.einsum("GgKE,GgKC->GgEC", onehot_e.astype(x.dtype),
+                          onehot_c)  # (G,g,E,C)
+    combine = jnp.einsum("GgKE,GgKC,GgK->GgEC",
+                         onehot_e.astype(jnp.float32),
+                         onehot_c.astype(jnp.float32),
+                         wg.astype(jnp.float32)).astype(x.dtype)
+
+    buf = jnp.einsum("GgD,GgEC->GECD", xg, dispatch)
+    buf = nn.constrain(buf, "data", "model", None, None)
+    wi = params["experts"]["wi"].astype(x.dtype)
+    wo = params["experts"]["wo"].astype(x.dtype)
+    h = jnp.einsum("GECD,EDtf->GECtf", buf, wi)
+    act = jax.nn.silu(h[..., 0, :]) * h[..., 1, :]
+    eout = jnp.einsum("GECf,EfD->GECD", act, wo)
+    out = jnp.einsum("GECD,GgEC->GgD", eout, combine)  # psum over model
+    out = out.reshape(B, S, D)
+    out = nn.constrain(out, "data", None, None)
+    if moe.n_shared_experts:
+        out = out + nn.apply_mlp(params["shared"], "swiglu", x)
+    return out, aux
+
+
+def moe_apply_scatter(params, cfg: ModelConfig, x):
+    """Scatter/gather token routing (paper-faithful GPU-style port)."""
+    moe = cfg.moe
+    B, S, D = x.shape
+    E, K = moe.n_experts, moe.top_k
+    C = _capacity(moe, S)
+
+    weights, ids, aux = router_topk(params, moe, x)  # (B,S,K)
+
+    # --- per-group capacity assignment ---------------------------------
+    flat_ids = ids.reshape(B, S * K)  # choice order: token-major
+    onehot = jax.nn.one_hot(flat_ids, E, dtype=jnp.int32)  # (B, SK, E)
+    pos_all = jnp.cumsum(onehot, axis=1) - 1  # (B, SK, E)
+    pos = jnp.sum(pos_all * onehot, -1)  # (B, SK) slot within expert
+    keep = pos < C
+    pos = jnp.where(keep, pos, C)  # C -> dropped via scatter mode "drop"
+
+    # --- dispatch: (B, E, C, D) buffers ---------------------------------
+    tok = jnp.repeat(x, K, axis=1)  # (B, SK, D) token per choice
+    scatter_idx = jnp.stack(
+        [flat_ids, pos], axis=-1)  # (B, SK, 2) -> (E, C)
+
+    def scatter_group(buf_idx, toks):
+        buf = jnp.zeros((E, C + 1, D), x.dtype)
+        buf = buf.at[buf_idx[:, 0], buf_idx[:, 1]].add(
+            toks, mode="drop")
+        return buf[:, :C]
+
+    buf = jax.vmap(scatter_group)(scatter_idx, tok)  # (B,E,C,D)
+    buf = nn.constrain(buf, "data", "model", None, None)
+
+    # --- expert compute (E sharded on "model") ---------------------------
+    wi = params["experts"]["wi"].astype(x.dtype)
+    wo = params["experts"]["wo"].astype(x.dtype)
+    h = jnp.einsum("becd,edtf->bectf", buf, wi)
+    act = jax.nn.silu(h[..., 0, :]) * h[..., 1, :]
+    eout = jnp.einsum("becf,efd->becd", act, wo)  # (B,E,C,D)
+    eout = nn.constrain(eout, "data", "model", None, None)
+
+    # --- combine: gather back + weighted sum over choices ----------------
+    def gather_group(e_out, buf_idx):
+        padded = jnp.pad(e_out, ((0, 0), (0, 1), (0, 0)))  # row C = zeros
+        return padded[buf_idx[:, 0], buf_idx[:, 1]]  # (SK, D)
+
+    picked = jax.vmap(gather_group)(eout, scatter_idx)  # (B, SK, D)
+    picked = picked.reshape(B, S, K, D)
+    w = (weights * keep.reshape(B, S, K)).astype(x.dtype)
+    out = jnp.einsum("bskd,bsk->bsd", picked, w)
+    out = nn.constrain(out, "data", None, None)
+
+    if moe.n_shared_experts:
+        out = out + nn.apply_mlp(params["shared"], "swiglu", x)
+    return out, aux

@@ -1,0 +1,253 @@
+"""Minimal functional NN layer library (no flax): params are nested dicts.
+
+Every parameter is created through an ``Init`` recorder which builds, in
+parallel with the parameter tree, a PartitionSpec tree used by the
+launcher for pjit sharding. Axis name conventions:
+
+  "data"  — batch-parallel axis (also pod-major when multi-pod)
+  "model" — tensor/expert-parallel axis
+  None    — replicated
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+
+class Init:
+    """Records a parallel (params, specs) tree as layers declare params.
+
+    With ``abstract=True`` parameters are ShapeDtypeStruct stand-ins (no
+    allocation) — used by the dry-run and by param_specs().
+    """
+
+    def __init__(self, key: Optional[jax.Array], dtype=jnp.float32,
+                 abstract: bool = False):
+        self._key = key if key is not None else jax.random.PRNGKey(0)
+        self.dtype = dtype
+        self.abstract = abstract
+
+    def next_key(self) -> jax.Array:
+        self._key, sub = jax.random.split(self._key)
+        return sub
+
+    def param(self, shape, spec, scale: float = 1.0, mode: str = "normal"):
+        """Create one parameter array and return (array, spec)."""
+        pspec = P(*spec) if isinstance(spec, tuple) else spec
+        if self.abstract:
+            return jax.ShapeDtypeStruct(tuple(shape), self.dtype), pspec
+        if mode == "zeros":
+            arr = jnp.zeros(shape, self.dtype)
+        elif mode == "ones":
+            arr = jnp.ones(shape, self.dtype)
+        elif mode == "normal":
+            arr = jax.random.normal(self.next_key(), shape, self.dtype) * scale
+        elif mode == "uniform":
+            arr = jax.random.uniform(
+                self.next_key(), shape, self.dtype, -scale, scale
+            )
+        elif mode == "lru_lambda":  # Griffin Lambda init: U(0.2, 0.85)
+            arr = jax.random.uniform(
+                self.next_key(), shape, self.dtype, 0.2, 0.85
+            )
+        else:  # pragma: no cover
+            raise ValueError(mode)
+        return arr, pspec
+
+
+def fanin_scale(fan_in: int) -> float:
+    return 1.0 / math.sqrt(max(fan_in, 1))
+
+
+# ---------------------------------------------------------------------------
+# Linear / embeddings
+# ---------------------------------------------------------------------------
+
+def linear_init(init: Init, d_in: int, d_out: int, spec=(None, "model"),
+                bias: bool = False, scale: Optional[float] = None):
+    scale = fanin_scale(d_in) if scale is None else scale
+    w, ws = init.param((d_in, d_out), spec, scale=scale)
+    params = {"w": w}
+    specs = {"w": ws}
+    if bias:
+        bspec = (spec[-1],) if isinstance(spec, tuple) else (None,)
+        b, bs = init.param((d_out,), bspec, mode="zeros")
+        params["b"] = b
+        specs["b"] = bs
+    return params, specs
+
+
+def linear(params, x):
+    y = x @ params["w"].astype(x.dtype)
+    if "b" in params:
+        y = y + params["b"].astype(x.dtype)
+    return y
+
+
+def embed_init(init: Init, vocab: int, d_model: int):
+    t, ts = init.param((vocab, d_model), ("model", None), scale=1.0)
+    return {"table": t}, {"table": ts}
+
+
+def embed(params, ids, dtype):
+    return params["table"].astype(dtype)[ids]
+
+
+def unembed(params, x):
+    """Logits via (tied) embedding table."""
+    return x @ params["table"].astype(x.dtype).T
+
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+
+def norm_init(init: Init, kind: str, dim: int):
+    if kind == "rmsnorm":
+        s, ss = init.param((dim,), (None,), mode="ones")
+        return {"scale": s}, {"scale": ss}
+    if kind == "layernorm":
+        s, ss = init.param((dim,), (None,), mode="ones")
+        b, bs = init.param((dim,), (None,), mode="zeros")
+        return {"scale": s, "bias": b}, {"scale": ss, "bias": bs}
+    if kind == "nonparametric_ln":
+        return {}, {}
+    raise ValueError(kind)
+
+
+def apply_norm(params, kind: str, x, eps: float = 1e-6):
+    xf = x.astype(jnp.float32)
+    if kind == "rmsnorm":
+        y = xf * jax.lax.rsqrt(jnp.mean(xf * xf, -1, keepdims=True) + eps)
+        y = y * params["scale"].astype(jnp.float32)
+    else:  # layernorm / nonparametric_ln
+        mu = jnp.mean(xf, -1, keepdims=True)
+        var = jnp.mean(jnp.square(xf - mu), -1, keepdims=True)
+        y = (xf - mu) * jax.lax.rsqrt(var + eps)
+        if params:
+            y = y * params["scale"].astype(jnp.float32) + params["bias"].astype(
+                jnp.float32
+            )
+    return y.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# MLPs
+# ---------------------------------------------------------------------------
+
+def mlp_init(init: Init, kind: str, d_model: int, d_ff: int):
+    if kind in ("swiglu", "geglu"):
+        wi, wis = init.param((d_model, 2, d_ff), (None, None, "model"),
+                             scale=fanin_scale(d_model))
+        wo, wos = init.param((d_ff, d_model), ("model", None),
+                             scale=fanin_scale(d_ff))
+        return {"wi": wi, "wo": wo}, {"wi": wis, "wo": wos}
+    if kind == "gelu":
+        p1, s1 = linear_init(init, d_model, d_ff, (None, "model"), bias=True)
+        p2, s2 = linear_init(init, d_ff, d_model, ("model", None), bias=True)
+        return {"in": p1, "out": p2}, {"in": s1, "out": s2}
+    raise ValueError(kind)
+
+
+def apply_mlp(params, kind: str, x):
+    if kind in ("swiglu", "geglu"):
+        wi = params["wi"].astype(x.dtype)
+        h = jnp.einsum("...d,dtf->...tf", x, wi)
+        gate, up = h[..., 0, :], h[..., 1, :]
+        act = jax.nn.silu(gate) if kind == "swiglu" else jax.nn.gelu(gate)
+        return (act * up) @ params["wo"].astype(x.dtype)
+    h = jax.nn.gelu(linear(params["in"], x))
+    return linear(params["out"], h)
+
+
+# ---------------------------------------------------------------------------
+# Rotary embeddings (RoPE and M-RoPE)
+# ---------------------------------------------------------------------------
+
+def rope_freqs(head_dim: int, theta: float) -> jnp.ndarray:
+    exponents = jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim
+    return 1.0 / (theta ** exponents)  # (head_dim/2,)
+
+
+def apply_rope(x: jnp.ndarray, positions: jnp.ndarray, theta: float):
+    """x: (..., seq, heads, head_dim); positions: (..., seq) int32."""
+    freqs = rope_freqs(x.shape[-1], theta)
+    ang = positions[..., None].astype(jnp.float32) * freqs  # (..., seq, hd/2)
+    sin = jnp.sin(ang)[..., None, :]
+    cos = jnp.cos(ang)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], -1)
+    return out.astype(x.dtype)
+
+
+def apply_mrope(x: jnp.ndarray, positions3: jnp.ndarray, theta: float,
+                sections: Tuple[int, int, int] = (1, 1, 2)):
+    """Qwen2-VL M-RoPE: rotary dims split into temporal/height/width groups.
+
+    x: (batch, seq, heads, head_dim); positions3: (3, batch, seq).
+    ``sections`` are relative fractions of head_dim/2 for (t, h, w).
+    """
+    hd = x.shape[-1]
+    half = hd // 2
+    total = sum(sections)
+    splits = [half * s // total for s in sections]
+    splits[-1] = half - sum(splits[:-1])
+    freqs = rope_freqs(hd, theta)  # (half,)
+    parts, start = [], 0
+    for i, n in enumerate(splits):
+        pos = positions3[i][..., None].astype(jnp.float32)  # (b, s, 1)
+        parts.append(pos * freqs[start:start + n])
+        start += n
+    ang = jnp.concatenate(parts, -1)  # (b, s, half)
+    sin = jnp.sin(ang)[..., None, :]
+    cos = jnp.cos(ang)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], -1)
+    return out.astype(x.dtype)
+
+
+def sinusoidal_positions(n: int, dim: int) -> jnp.ndarray:
+    pos = jnp.arange(n, dtype=jnp.float32)[:, None]
+    div = jnp.exp(
+        jnp.arange(0, dim, 2, dtype=jnp.float32) * (-math.log(10000.0) / dim)
+    )
+    pe = jnp.zeros((n, dim), jnp.float32)
+    pe = pe.at[:, 0::2].set(jnp.sin(pos * div))
+    pe = pe.at[:, 1::2].set(jnp.cos(pos * div))
+    return pe
+
+
+# ---------------------------------------------------------------------------
+# Sharding helpers
+# ---------------------------------------------------------------------------
+
+# Logical -> physical axis mapping. The launcher remaps "data" to
+# ("pod", "data") on the multi-pod mesh so in-model constraints stay
+# consistent with the input shardings (no accidental resharding).
+_AXIS_MAP = {"data": "data", "model": "model"}
+
+
+def set_axis_map(mapping):
+    _AXIS_MAP.update(mapping)
+
+
+def logical_spec(*spec) -> P:
+    return P(*[_AXIS_MAP.get(a, a) if isinstance(a, str) else a
+               for a in spec])
+
+
+def constrain(x, *spec):
+    """with_sharding_constraint that is a no-op outside a mesh context."""
+    try:
+        return jax.lax.with_sharding_constraint(x, logical_spec(*spec))
+    except (ValueError, RuntimeError, TypeError, AssertionError):
+        return x
+
+
+def shardable(n: int, axis_size: int) -> bool:
+    return axis_size > 0 and n % axis_size == 0

@@ -1,0 +1,465 @@
+"""Recurrent layer kinds: Griffin RG-LRU blocks and xLSTM (mLSTM/sLSTM).
+
+TPU adaptation notes (see DESIGN.md §3):
+  * RG-LRU uses jax.lax.associative_scan (log-depth) for train/prefill and
+    a single fused step for decode; the Pallas kernel in
+    repro.kernels.rg_lru implements the blocked linear scan for TPU.
+  * mLSTM uses the stabilized *chunkwise* formulation: quadratic
+    attention-like compute within chunks (MXU-friendly), linear carry of
+    the (head_dim x head_dim) matrix memory across chunks.
+  * sLSTM is inherently sequential (recurrent weights); a lax.scan over
+    time with a block-diagonal recurrent matrix. Decode is one step.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import nn
+from repro.models.config import ModelConfig
+
+SQRT2 = math.sqrt(2.0)
+
+
+# ---------------------------------------------------------------------------
+# Causal depthwise conv1d (shared by rg_lru / xlstm branches)
+# ---------------------------------------------------------------------------
+
+def conv1d_init(init: nn.Init, width: int, channels: int):
+    w, ws = init.param((width, channels), (None, "model"),
+                       scale=nn.fanin_scale(width))
+    b, bs = init.param((channels,), ("model",), mode="zeros")
+    return {"w": w, "b": b}, {"w": ws, "b": bs}
+
+
+def conv1d_causal(params, x):
+    """x: (B, S, C). y[t] = sum_k w[k] * x[t-k]."""
+    w = params["w"].astype(x.dtype)
+    width = w.shape[0]
+    out = x * w[0]
+    for k in range(1, width):
+        shifted = jnp.pad(x, ((0, 0), (k, 0), (0, 0)))[:, : x.shape[1]]
+        out = out + shifted * w[k]
+    return out + params["b"].astype(x.dtype)
+
+
+def conv1d_decode(params, x_t, conv_cache):
+    """x_t: (B, 1, C); conv_cache: (B, width-1, C) most-recent-last."""
+    w = params["w"].astype(x_t.dtype)
+    width = w.shape[0]
+    hist = jnp.concatenate([conv_cache.astype(x_t.dtype), x_t], axis=1)
+    out = jnp.einsum("btc,tc->bc", hist, w[::-1])[:, None, :]
+    new_cache = hist[:, 1:].astype(conv_cache.dtype)
+    return out + params["b"].astype(x_t.dtype), new_cache
+
+
+# ---------------------------------------------------------------------------
+# RG-LRU (RecurrentGemma / Griffin)
+# ---------------------------------------------------------------------------
+
+_LRU_C = 8.0  # Griffin's fixed temperature on the recurrence gate
+
+
+def _block_diag_init(init: nn.Init, n_heads: int, dim: int):
+    hd = dim // n_heads
+    w, ws = init.param((n_heads, hd, hd), ("model", None, None),
+                       scale=nn.fanin_scale(hd))
+    b, bs = init.param((dim,), ("model",), mode="zeros")
+    return {"w": w, "b": b}, {"w": ws, "b": bs}
+
+
+def _block_diag_apply(params, x, n_heads: int):
+    B, S, C = x.shape
+    xh = x.reshape(B, S, n_heads, C // n_heads)
+    y = jnp.einsum("bshi,hij->bshj", xh, params["w"].astype(x.dtype))
+    return y.reshape(B, S, C) + params["b"].astype(x.dtype)
+
+
+def rg_lru_init(init: nn.Init, cfg: ModelConfig):
+    lw = cfg.lru_width
+    params, specs = {}, {}
+    # Lambda parametrized so that a = exp(-c*softplus(L)) starts in
+    # (0.9, 0.999) as in Griffin: U(0.2, 0.85).
+    lam, ls = init.param((lw,), ("model",), mode="lru_lambda")
+    params["lambda"] = lam
+    specs["lambda"] = ls
+    for nm in ("gate_a", "gate_x"):
+        p, s = _block_diag_init(init, cfg.n_heads, lw)
+        params[nm], specs[nm] = p, s
+    return params, specs
+
+
+def _lru_log_a(params, gate_a):
+    """log a_t in float32; gate_a: (B,S,C) pre-sigmoid."""
+    softplus_l = jax.nn.softplus(params["lambda"].astype(jnp.float32))
+    r = jax.nn.sigmoid(gate_a.astype(jnp.float32))
+    return -_LRU_C * softplus_l * r  # (B,S,C), <= 0
+
+
+def rg_lru_scan(params, cfg: ModelConfig, x, h0=None, impl: str = "reference"):
+    """Full-sequence RG-LRU. x: (B,S,C) conv output. Returns (y, h_last)."""
+    ga = _block_diag_apply(params["gate_a"], x, cfg.n_heads)
+    gx = _block_diag_apply(params["gate_x"], x, cfg.n_heads)
+    log_a = _lru_log_a(params, ga)  # (B,S,C) f32
+    gated_x = jax.nn.sigmoid(gx.astype(jnp.float32)) * x.astype(jnp.float32)
+    beta = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-12))
+    b = beta * gated_x
+    if impl == "pallas":
+        from repro.kernels.rg_lru import ops as lru_ops
+
+        y, h_last = lru_ops.linear_scan(jnp.exp(log_a), b, h0)
+        return y.astype(x.dtype), h_last
+    a = jnp.exp(log_a)
+    if h0 is not None:
+        b = b.at[:, 0].add(a[:, 0] * h0.astype(jnp.float32))
+
+    def combine(e1, e2):
+        a1, b1 = e1
+        a2, b2 = e2
+        return a1 * a2, a2 * b1 + b2
+
+    _, y = jax.lax.associative_scan(combine, (a, b), axis=1)
+    return y.astype(x.dtype), y[:, -1].astype(jnp.float32)
+
+
+def rg_lru_step(params, cfg: ModelConfig, x_t, h):
+    """One decode step. x_t: (B,1,C); h: (B,C) f32."""
+    ga = _block_diag_apply(params["gate_a"], x_t, cfg.n_heads)
+    gx = _block_diag_apply(params["gate_x"], x_t, cfg.n_heads)
+    log_a = _lru_log_a(params, ga)[:, 0]  # (B,C)
+    a = jnp.exp(log_a)
+    beta = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-12))
+    gated = jax.nn.sigmoid(gx.astype(jnp.float32))[:, 0] * x_t.astype(
+        jnp.float32)[:, 0]
+    h_new = a * h + beta * gated
+    return h_new.astype(x_t.dtype)[:, None, :], h_new
+
+
+def griffin_block_init(init: nn.Init, cfg: ModelConfig):
+    """Recurrent block: two branches, conv1d + RG-LRU on one."""
+    d, lw = cfg.d_model, cfg.lru_width
+    params, specs = {}, {}
+    for nm in ("wx", "wy"):
+        p, s = nn.linear_init(init, d, lw, (None, "model"))
+        params[nm], specs[nm] = p, s
+    p, s = conv1d_init(init, cfg.conv1d_width, lw)
+    params["conv"], specs["conv"] = p, s
+    p, s = rg_lru_init(init, cfg)
+    params["lru"], specs["lru"] = p, s
+    p, s = nn.linear_init(init, lw, d, ("model", None))
+    params["wo"], specs["wo"] = p, s
+    return params, specs
+
+
+def griffin_block(params, cfg: ModelConfig, x, *, mode="train", cache=None,
+                  impl: str = "reference"):
+    """x: (B,S,D) normed input. cache: {"conv": ..., "h": ...}."""
+    gate = jax.nn.gelu(nn.linear(params["wx"], x))
+    y = nn.linear(params["wy"], x)
+    new_cache = cache
+    if mode == "decode":
+        y, conv_cache = conv1d_decode(params["conv"], y, cache["conv"])
+        y, h = rg_lru_step(params["lru"], cfg, y, cache["h"])
+        new_cache = {"conv": conv_cache, "h": h}
+    else:
+        y = conv1d_causal(params["conv"], y)
+        y, h_last = rg_lru_scan(params["lru"], cfg, y, impl=impl)
+        if mode == "prefill" and cache is not None:
+            tail = y  # conv history = last (width-1) pre-conv inputs
+            conv_cache = nn.linear(params["wy"], x)[:, -(cfg.conv1d_width - 1):]
+            new_cache = {"conv": conv_cache.astype(cache["conv"].dtype),
+                         "h": h_last}
+            del tail
+    out = nn.linear(params["wo"], y * gate)
+    return out, new_cache
+
+
+def init_griffin_cache(cfg: ModelConfig, batch: int, dtype=jnp.bfloat16):
+    return {
+        "conv": jnp.zeros((batch, cfg.conv1d_width - 1, cfg.lru_width), dtype),
+        "h": jnp.zeros((batch, cfg.lru_width), jnp.float32),
+    }
+
+
+# ---------------------------------------------------------------------------
+# mLSTM (xLSTM matrix-memory block)
+# ---------------------------------------------------------------------------
+
+def mlstm_block_init(init: nn.Init, cfg: ModelConfig):
+    d = cfg.d_model
+    di = 2 * d  # proj_factor 2
+    H = cfg.n_heads
+    params, specs = {}, {}
+    p, s = nn.linear_init(init, d, 2 * di, (None, "model"))
+    params["up"], specs["up"] = p, s
+    p, s = conv1d_init(init, cfg.conv1d_width, di)
+    params["conv"], specs["conv"] = p, s
+    for nm in ("wq", "wk"):
+        p, s = _block_diag_init(init, H, di)
+        params[nm], specs[nm] = p, s
+    p, s = _block_diag_init(init, H, di)
+    params["wv"], specs["wv"] = p, s
+    for nm in ("wi", "wf"):
+        p, s = nn.linear_init(init, di, H, (None, None))
+        params[nm], specs[nm] = p, s
+    p, s = nn.norm_init(init, "rmsnorm", di)  # multi-head norm (grouped)
+    params["hnorm"], specs["hnorm"] = p, s
+    p, s = nn.linear_init(init, di, d, ("model", None))
+    params["down"], specs["down"] = p, s
+    return params, specs
+
+
+def mlstm_chunkwise(q, k, v, log_i, log_f, chunk: int = 256,
+                    state=None, impl: str = "reference"):
+    """Stabilized chunkwise mLSTM.
+
+    q,k,v: (B,S,H,hd); log_i/log_f: (B,S,H) (f32). Returns (h, state).
+    state = (C (B,H,hd,hd), n (B,H,hd), m (B,H)) carried across chunks.
+    """
+    if impl == "pallas":
+        from repro.kernels.mlstm import ops as ml_ops
+
+        return ml_ops.mlstm_chunkwise(q, k, v, log_i, log_f, chunk=chunk,
+                                      state=state)
+    B, S, H, hd = q.shape
+    if S % chunk != 0:
+        chunk = S  # small sequences: single chunk
+    nc = S // chunk
+
+    def resh(x):
+        return jnp.moveaxis(
+            x.reshape(B, nc, chunk, *x.shape[2:]), 1, 0)  # (nc,B,chunk,...)
+
+    qs, ks, vs = resh(q), resh(k), resh(v)
+    lis, lfs = resh(log_i), resh(log_f)
+
+    if state is None:
+        C0 = jnp.zeros((B, H, hd, hd), jnp.float32)
+        n0 = jnp.zeros((B, H, hd), jnp.float32)
+        m0 = jnp.full((B, H), -1e30, jnp.float32)
+    else:
+        C0, n0, m0 = state
+
+    def body(carry, inp):
+        C, n, m = carry
+        qc, kc, vc, li, lf = inp  # (B,chunk,H,...)
+        qc32 = qc.astype(jnp.float32)
+        kc32 = kc.astype(jnp.float32)
+        vc32 = vc.astype(jnp.float32)
+        b = jnp.cumsum(lf, axis=1)  # (B,chunk,H) cumulative log-forget
+        total_f = b[:, -1]  # (B,H)
+        # intra-chunk decay: D[i,j] = b_i - b_j + li_j for j <= i
+        dmat = (b[:, :, None, :] - b[:, None, :, :]
+                + li[:, None, :, :])  # (B,i,j,H)
+        causal = jnp.tril(jnp.ones((chunk, chunk), bool))
+        dmat = jnp.where(causal[None, :, :, None], dmat, -jnp.inf)
+        # inter-chunk contribution decay for queries: b_i + m_prev
+        inter_log = b + m[:, None, :]  # (B,i,H)
+        m_intra = jnp.max(dmat, axis=2)  # (B,i,H)
+        m_new = jnp.maximum(inter_log, m_intra)  # (B,i,H) per-row stabilizer
+        dmat_s = jnp.exp(dmat - m_new[:, :, None, :])  # (B,i,j,H)
+        inter_s = jnp.exp(inter_log - m_new)  # (B,i,H)
+
+        scores = jnp.einsum("bihd,bjhd->bijh", qc32, kc32)
+        intra = jnp.einsum("bijh,bijh,bjhd->bihd", scores, dmat_s, vc32)
+        inter = jnp.einsum("bihd,bhde->bihe", qc32, C) * inter_s[..., None]
+        num = intra + inter
+        den_intra = jnp.einsum("bijh,bijh->bih", scores, dmat_s)
+        den_inter = jnp.einsum("bihd,bhd->bih", qc32, n) * inter_s
+        den = den_intra + den_inter
+        h = num / jnp.maximum(
+            jnp.abs(den)[..., None], jnp.exp(-m_new)[..., None])
+
+        # state update for the next chunk
+        m_next = jnp.maximum(total_f + m, jnp.max(b + li, axis=1))  # (B,H)
+        # decay applied to each key position j: total_f - b_j + li_j
+        kdecay = jnp.exp(total_f[:, None] - b + li - m_next[:, None])
+        C_next = (jnp.exp(total_f + m - m_next)[..., None, None] * C
+                  + jnp.einsum("bjh,bjhd,bjhe->bhde", kdecay, kc32, vc32))
+        n_next = (jnp.exp(total_f + m - m_next)[..., None] * n
+                  + jnp.einsum("bjh,bjhd->bhd", kdecay, kc32))
+        return (C_next, n_next, m_next), h.astype(q.dtype)
+
+    (C, n, m), hs = jax.lax.scan(body, (C0, n0, m0), (qs, ks, vs, lis, lfs))
+    h = jnp.moveaxis(hs, 0, 1).reshape(B, S, H, hd)
+    return h, (C, n, m)
+
+
+def mlstm_step(q, k, v, log_i, log_f, state):
+    """Single decode step. q,k,v: (B,1,H,hd); gates (B,1,H)."""
+    C, n, m = state
+    q32, k32, v32 = (x.astype(jnp.float32)[:, 0] for x in (q, k, v))
+    li, lf = log_i[:, 0], log_f[:, 0]  # (B,H)
+    m_new = jnp.maximum(lf + m, li)
+    fgate = jnp.exp(lf + m - m_new)[..., None, None]
+    igate = jnp.exp(li - m_new)[..., None, None]
+    C_new = fgate * C + igate * jnp.einsum("bhd,bhe->bhde", k32, v32)
+    n_new = fgate[..., 0] * n + igate[..., 0] * k32
+    num = jnp.einsum("bhd,bhde->bhe", q32, C_new)
+    den = jnp.einsum("bhd,bhd->bh", q32, n_new)
+    h = num / jnp.maximum(jnp.abs(den), jnp.exp(-m_new))[..., None]
+    return h[:, None].astype(q.dtype), (C_new, n_new, m_new)
+
+
+def mlstm_block(params, cfg: ModelConfig, x, *, mode="train", cache=None,
+                impl: str = "reference"):
+    B, S, d = x.shape
+    di = 2 * d
+    H = cfg.n_heads
+    hd = di // H
+    up = nn.linear(params["up"], x)
+    x1, x2 = up[..., :di], up[..., di:]
+    new_cache = cache
+    if mode == "decode":
+        c, conv_cache = conv1d_decode(params["conv"], x1, cache["conv"])
+    else:
+        c = conv1d_causal(params["conv"], x1)
+        conv_cache = None
+    c = jax.nn.silu(c)
+    q = _block_diag_apply(params["wq"], c, H).reshape(B, S, H, hd)
+    k = _block_diag_apply(params["wk"], c, H).reshape(B, S, H, hd) / math.sqrt(hd)
+    v = _block_diag_apply(params["wv"], x1, H).reshape(B, S, H, hd)
+    log_i = nn.linear(params["wi"], c).astype(jnp.float32)  # (B,S,H)
+    log_f = jax.nn.log_sigmoid(
+        nn.linear(params["wf"], c).astype(jnp.float32))
+
+    if mode == "decode":
+        h, state = mlstm_step(q, k, v, log_i, log_f, cache["state"])
+        new_cache = {"conv": conv_cache, "state": state}
+    else:
+        h, state = mlstm_chunkwise(q, k, v, log_i, log_f, impl=impl)
+        if mode == "prefill" and cache is not None:
+            new_cache = {
+                "conv": x1[:, -(cfg.conv1d_width - 1):].astype(
+                    cache["conv"].dtype),
+                "state": state,
+            }
+    h = h.reshape(B, S, di)
+    h = nn.apply_norm(params["hnorm"], "rmsnorm", h)
+    out = nn.linear(params["down"], h * jax.nn.silu(x2))
+    return out, new_cache
+
+
+def init_mlstm_cache(cfg: ModelConfig, batch: int, dtype=jnp.bfloat16):
+    di = 2 * cfg.d_model
+    H = cfg.n_heads
+    hd = di // H
+    return {
+        "conv": jnp.zeros((batch, cfg.conv1d_width - 1, di), dtype),
+        "state": (
+            jnp.zeros((batch, H, hd, hd), jnp.float32),
+            jnp.zeros((batch, H, hd), jnp.float32),
+            jnp.full((batch, H), -1e30, jnp.float32),
+        ),
+    }
+
+
+# ---------------------------------------------------------------------------
+# sLSTM (xLSTM scalar-memory block)
+# ---------------------------------------------------------------------------
+
+def slstm_block_init(init: nn.Init, cfg: ModelConfig):
+    d = cfg.d_model
+    H = cfg.n_heads
+    params, specs = {}, {}
+    p, s = conv1d_init(init, cfg.conv1d_width, d)
+    params["conv"], specs["conv"] = p, s
+    for nm in ("wz", "wi", "wf", "wo"):
+        p, s = nn.linear_init(init, d, d, (None, "model"))
+        params[nm], specs[nm] = p, s
+    for nm in ("rz", "ri", "rf", "ro"):
+        p, s = _block_diag_init(init, H, d)
+        params[nm], specs[nm] = p, s
+    p, s = nn.norm_init(init, "rmsnorm", d)
+    params["hnorm"], specs["hnorm"] = p, s
+    dff = (4 * d) // 3
+    p, s = nn.mlp_init(init, "geglu", d, dff)
+    params["ffn"], specs["ffn"] = p, s
+    return params, specs
+
+
+def _slstm_cell(params, cfg: ModelConfig, zx, ix, fx, ox, state):
+    """One timestep. *x: (B,D) pre-activations from the input side."""
+    c, n, h, m = state
+    H = cfg.n_heads
+
+    def rec(nm, h_):
+        return _block_diag_apply(params[nm], h_[:, None, :], H)[:, 0]
+
+    z = jnp.tanh(zx + rec("rz", h))
+    o = jax.nn.sigmoid(ox + rec("ro", h))
+    log_i = ix + rec("ri", h)
+    log_f = jax.nn.log_sigmoid(fx + rec("rf", h))
+    m_new = jnp.maximum(log_f + m, log_i)
+    i_s = jnp.exp(log_i - m_new)
+    f_s = jnp.exp(log_f + m - m_new)
+    c_new = f_s * c + i_s * z
+    n_new = f_s * n + i_s
+    h_new = o * c_new / jnp.maximum(n_new, 1e-6)
+    return (c_new, n_new, h_new, m_new), h_new
+
+
+def slstm_block(params, cfg: ModelConfig, x, *, mode="train", cache=None):
+    B, S, d = x.shape
+    new_cache = cache
+    if mode == "decode":
+        cx, conv_cache = conv1d_decode(params["conv"], x, cache["conv"])
+    else:
+        cx = conv1d_causal(params["conv"], x)
+        conv_cache = None
+    cx = jax.nn.silu(cx)
+    zx = nn.linear(params["wz"], x).astype(jnp.float32)
+    ox = nn.linear(params["wo"], x).astype(jnp.float32)
+    ix = nn.linear(params["wi"], cx).astype(jnp.float32)
+    fx = nn.linear(params["wf"], cx).astype(jnp.float32)
+
+    if mode == "decode":
+        state = cache["state"]
+        state, h = _slstm_cell(params, cfg, zx[:, 0], ix[:, 0], fx[:, 0],
+                               ox[:, 0], state)
+        hs = h[:, None, :]
+        new_cache = {"conv": conv_cache, "state": state}
+    else:
+        state = (
+            jnp.zeros((B, d), jnp.float32),
+            jnp.zeros((B, d), jnp.float32),
+            jnp.zeros((B, d), jnp.float32),
+            jnp.full((B, d), -1e30, jnp.float32),
+        )
+
+        def body(st, inp):
+            z_, i_, f_, o_ = inp
+            st2, h_ = _slstm_cell(params, cfg, z_, i_, f_, o_, st)
+            return st2, h_
+
+        state, hs = jax.lax.scan(
+            body, state,
+            (jnp.moveaxis(zx, 1, 0), jnp.moveaxis(ix, 1, 0),
+             jnp.moveaxis(fx, 1, 0), jnp.moveaxis(ox, 1, 0)))
+        hs = jnp.moveaxis(hs, 0, 1)
+        if mode == "prefill" and cache is not None:
+            new_cache = {
+                "conv": x[:, -(cfg.conv1d_width - 1):].astype(
+                    cache["conv"].dtype),
+                "state": state,
+            }
+    hs = nn.apply_norm(params["hnorm"], "rmsnorm", hs.astype(x.dtype))
+    out = hs + nn.apply_mlp(params["ffn"], "geglu", hs)
+    return out, new_cache
+
+
+def init_slstm_cache(cfg: ModelConfig, batch: int, dtype=jnp.bfloat16):
+    d = cfg.d_model
+    return {
+        "conv": jnp.zeros((batch, cfg.conv1d_width - 1, d), dtype),
+        "state": (
+            jnp.zeros((batch, d), jnp.float32),
+            jnp.zeros((batch, d), jnp.float32),
+            jnp.zeros((batch, d), jnp.float32),
+            jnp.full((batch, d), -1e30, jnp.float32),
+        ),
+    }

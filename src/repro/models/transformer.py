@@ -1,0 +1,495 @@
+"""Unified LM assembly: embedding -> head/body/tail layer pattern -> logits.
+
+The body pattern is executed with jax.lax.scan over ``n_periods`` stacked
+parameter pytrees (one period = one or more layers unrolled inside the
+scan body) so the lowered HLO stays small for 16..48-layer models, and a
+remat (activation checkpointing) policy is applied per period.
+
+Caches: every layer owns its cache pytree; "xattn" (whisper decoder)
+layers additionally own a cross-attention K/V cache filled at prefill.
+Body-layer caches carry a leading ``n_periods`` axis and are scanned.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import attention as attn
+from repro.models import moe as moe_lib
+from repro.models import nn
+from repro.models import recurrent as rec
+from repro.models.config import ModelConfig
+
+
+class StackedInit(nn.Init):
+    """Init wrapper that prepends an n_periods axis to every parameter."""
+
+    def __init__(self, base: nn.Init, n: int):
+        self._base = base
+        self.n = n
+        self.dtype = base.dtype
+
+    def next_key(self):
+        return self._base.next_key()
+
+    def param(self, shape, spec, scale: float = 1.0, mode: str = "normal"):
+        return self._base.param((self.n,) + tuple(shape),
+                                (None,) + tuple(spec), scale=scale, mode=mode)
+
+
+# ---------------------------------------------------------------------------
+# Single layer init / apply / cache
+# ---------------------------------------------------------------------------
+
+def layer_init(init: nn.Init, cfg: ModelConfig, kind: str):
+    params, specs = {}, {}
+    p, s = nn.norm_init(init, cfg.norm, cfg.d_model)
+    params["norm1"], specs["norm1"] = p, s
+
+    if kind in ("attn", "local_attn", "enc_attn", "moe_attn", "dense_attn",
+                "xattn"):
+        p, s = attn.attention_init(init, cfg)
+        params["attn"], specs["attn"] = p, s
+    elif kind in ("mla_attn", "mla_moe_attn"):
+        p, s = attn.mla_init(init, cfg)
+        params["attn"], specs["attn"] = p, s
+    elif kind == "rg_lru":
+        p, s = rec.griffin_block_init(init, cfg)
+        params["mix"], specs["mix"] = p, s
+    elif kind == "mlstm":
+        p, s = rec.mlstm_block_init(init, cfg)
+        params["mix"], specs["mix"] = p, s
+        return params, specs  # self-contained block
+    elif kind == "slstm":
+        p, s = rec.slstm_block_init(init, cfg)
+        params["mix"], specs["mix"] = p, s
+        return params, specs
+    else:  # pragma: no cover
+        raise ValueError(kind)
+
+    if kind == "xattn":
+        p, s = nn.norm_init(init, cfg.norm, cfg.d_model)
+        params["norm_x"], specs["norm_x"] = p, s
+        p, s = attn.attention_init(init, cfg)
+        params["xattn"], specs["xattn"] = p, s
+
+    p, s = nn.norm_init(init, cfg.norm, cfg.d_model)
+    params["norm2"], specs["norm2"] = p, s
+    if kind in ("moe_attn", "mla_moe_attn"):
+        p, s = moe_lib.moe_init(init, cfg)
+        params["moe"], specs["moe"] = p, s
+    else:
+        p, s = nn.mlp_init(init, cfg.mlp, cfg.d_model, cfg.d_ff)
+        params["mlp"], specs["mlp"] = p, s
+    return params, specs
+
+
+def layer_apply(params, cfg: ModelConfig, kind: str, x, positions, *,
+                mode: str, cache, enc_out=None):
+    """One layer. Returns (x, new_cache, aux_loss).
+
+    ``cache`` is the layer's own cache pytree or a no-cache sentinel dict.
+    ``enc_out`` is the encoder output (train/prefill of xattn layers).
+    """
+    aux = jnp.zeros((), jnp.float32)
+    rm = cfg.residual_multiplier
+    nocache = cache is None or "__nocache__" in cache
+    self_cache = None if nocache else cache.get("self", cache)
+    h = nn.apply_norm(params["norm1"], cfg.norm, x)
+
+    if kind in ("attn", "dense_attn", "moe_attn", "xattn", "local_attn"):
+        y, self_cache = attn.attention_block(
+            params["attn"], cfg, h, positions, local=(kind == "local_attn"),
+            mode=mode, cache=self_cache)
+    elif kind == "enc_attn":
+        y, _ = attn.attention_block_bidirectional(params["attn"], cfg, h,
+                                                  positions)
+    elif kind in ("mla_attn", "mla_moe_attn"):
+        y, self_cache = attn.mla_block(params["attn"], cfg, h, positions,
+                                       mode=mode, cache=self_cache)
+    elif kind == "rg_lru":
+        y, self_cache = rec.griffin_block(params["mix"], cfg, h, mode=mode,
+                                          cache=self_cache,
+                                          impl=cfg.attn_impl)
+    elif kind == "mlstm":
+        y, self_cache = rec.mlstm_block(params["mix"], cfg, h, mode=mode,
+                                        cache=self_cache, impl=cfg.attn_impl)
+        return x + y * rm, _repack(cache, self_cache), aux
+    elif kind == "slstm":
+        y, self_cache = rec.slstm_block(params["mix"], cfg, h, mode=mode,
+                                        cache=self_cache)
+        return x + y * rm, _repack(cache, self_cache), aux
+    else:  # pragma: no cover
+        raise ValueError(kind)
+
+    x = x + y * rm
+
+    cross_cache = None if nocache else cache.get("cross")
+    if kind == "xattn":
+        hx = nn.apply_norm(params["norm_x"], cfg.norm, x)
+        if mode in ("train", "prefill"):
+            xkv = attn.encode_cross_kv(params["xattn"], cfg, enc_out)
+            if mode == "prefill" and cross_cache is not None:
+                cross_cache = jax.tree_util.tree_map(
+                    lambda dst, src: src.astype(dst.dtype), cross_cache, xkv)
+        else:
+            xkv = cross_cache
+        x = x + attn.cross_attention_block(params["xattn"], cfg, hx, xkv)
+
+    h2 = nn.apply_norm(params["norm2"], cfg.norm, x)
+    if kind in ("moe_attn", "mla_moe_attn"):
+        y2, aux = moe_lib.moe_apply(params["moe"], cfg, h2)
+    else:
+        y2 = nn.apply_mlp(params["mlp"], cfg.mlp, h2)
+    x = x + y2 * rm
+    x = nn.constrain(x, "data", None, None)
+
+    if nocache:
+        new_cache = cache  # pass the sentinel through unchanged
+    elif "self" in cache:
+        new_cache = dict(cache)
+        new_cache["self"] = self_cache
+        if cross_cache is not None:
+            new_cache["cross"] = cross_cache
+    else:
+        new_cache = self_cache
+    return x, new_cache, aux
+
+
+def _repack(cache, self_cache):
+    if cache is None or "__nocache__" in cache:
+        return cache
+    if "self" in cache:
+        out = dict(cache)
+        out["self"] = self_cache
+        return out
+    return self_cache
+
+
+NO_CACHE = {"__nocache__": jnp.zeros((1,), jnp.int8)}
+
+
+def layer_cache(cfg: ModelConfig, kind: str, batch: int, length: int,
+                dtype=jnp.bfloat16):
+    if kind in ("attn", "dense_attn", "moe_attn"):
+        c = attn.init_kv_cache(cfg, batch, length, local=False, dtype=dtype)
+    elif kind == "local_attn":
+        c = attn.init_kv_cache(cfg, batch, length, local=True, dtype=dtype)
+    elif kind in ("mla_attn", "mla_moe_attn"):
+        c = attn.init_mla_cache(cfg, batch, length, dtype=dtype)
+    elif kind == "rg_lru":
+        c = rec.init_griffin_cache(cfg, batch, dtype=dtype)
+    elif kind == "mlstm":
+        c = rec.init_mlstm_cache(cfg, batch, dtype=dtype)
+    elif kind == "slstm":
+        c = rec.init_slstm_cache(cfg, batch, dtype=dtype)
+    elif kind == "xattn":
+        c = {
+            "self": attn.init_kv_cache(cfg, batch, length, local=False,
+                                       dtype=dtype),
+            "cross": {
+                "k": jnp.zeros((batch, cfg.n_audio_frames, cfg.n_kv_heads,
+                                cfg.head_dim), dtype),
+                "v": jnp.zeros((batch, cfg.n_audio_frames, cfg.n_kv_heads,
+                                cfg.head_dim), dtype),
+            },
+        }
+    elif kind == "enc_attn":
+        c = NO_CACHE
+    else:  # pragma: no cover
+        raise ValueError(kind)
+    return c
+
+
+# ---------------------------------------------------------------------------
+# Whole-model init / cache
+# ---------------------------------------------------------------------------
+
+def model_init(cfg: ModelConfig, key, abstract: bool = False
+               ) -> Tuple[Dict, Dict]:
+    init = nn.Init(key, dtype=jnp.float32, abstract=abstract)
+    params: Dict[str, Any] = {}
+    specs: Dict[str, Any] = {}
+
+    p, s = nn.embed_init(init, cfg.vocab_size, cfg.d_model)
+    params["embed"], specs["embed"] = p, s
+    if cfg.rope_style == "learned":
+        p, s = init.param((cfg.max_seq, cfg.d_model), (None, None),
+                          scale=0.02)
+        params["pos_embed"], specs["pos_embed"] = {"table": p}, {"table": s}
+
+    if cfg.n_encoder_layers:
+        enc_stack = StackedInit(init, cfg.n_encoder_layers)
+        p, s = layer_init(enc_stack, cfg, "enc_attn")
+        params["encoder"], specs["encoder"] = p, s
+        p, s = nn.norm_init(init, cfg.norm, cfg.d_model)
+        params["enc_norm"], specs["enc_norm"] = p, s
+
+    for group, pattern in (("head", cfg.head_pattern),
+                           ("tail", cfg.tail_pattern)):
+        if pattern:
+            ps, ss = [], []
+            for kind in pattern:
+                p, s = layer_init(init, cfg, kind)
+                ps.append(p)
+                ss.append(s)
+            params[group], specs[group] = ps, ss
+
+    body_init = StackedInit(init, cfg.n_periods)
+    ps, ss = [], []
+    for kind in cfg.body_pattern:
+        p, s = layer_init(body_init, cfg, kind)
+        ps.append(p)
+        ss.append(s)
+    params["body"], specs["body"] = ps, ss
+
+    p, s = nn.norm_init(init, cfg.norm, cfg.d_model)
+    params["final_norm"], specs["final_norm"] = p, s
+    if not cfg.tie_embeddings:
+        p, s = nn.linear_init(init, cfg.d_model, cfg.vocab_size,
+                              (None, "model"))
+        params["lm_head"], specs["lm_head"] = p, s
+    return params, specs
+
+
+def model_cache(cfg: ModelConfig, batch: int, length: int,
+                dtype=jnp.bfloat16):
+    cache: Dict[str, Any] = {}
+    for group, pattern in (("head", cfg.head_pattern),
+                           ("tail", cfg.tail_pattern)):
+        if pattern:
+            cache[group] = [layer_cache(cfg, k, batch, length, dtype)
+                            for k in pattern]
+    body = []
+    for kind in cfg.body_pattern:
+        one = layer_cache(cfg, kind, batch, length, dtype)
+        body.append(jax.tree_util.tree_map(
+            lambda x: jnp.broadcast_to(
+                x[None], (cfg.n_periods,) + x.shape).copy(), one))
+    cache["body"] = body
+    return cache
+
+
+def no_cache_tree(cfg: ModelConfig):
+    """Sentinel cache pytree usable as scan xs when training."""
+    cache: Dict[str, Any] = {}
+    for group, pattern in (("head", cfg.head_pattern),
+                           ("tail", cfg.tail_pattern)):
+        if pattern:
+            cache[group] = [dict(NO_CACHE) for _ in pattern]
+    cache["body"] = [
+        {"__nocache__": jnp.zeros((cfg.n_periods, 1), jnp.int8)}
+        for _ in cfg.body_pattern
+    ]
+    return cache
+
+
+# ---------------------------------------------------------------------------
+# Forward
+# ---------------------------------------------------------------------------
+
+def _remat(fn, cfg: ModelConfig):
+    if cfg.remat == "none":
+        return fn
+    if cfg.remat == "dots":
+        return jax.checkpoint(
+            fn, policy=jax.checkpoint_policies.checkpoint_dots)
+    return jax.checkpoint(fn)
+
+
+def run_encoder(params, cfg: ModelConfig, frames):
+    """Whisper-style encoder over precomputed frame embeddings (the conv
+    frontend is a stub per the assignment): frames (B, T, D)."""
+    B, T, D = frames.shape
+    x = frames + nn.sinusoidal_positions(T, D)[None].astype(frames.dtype)
+    positions = jnp.broadcast_to(jnp.arange(T), (B, T))
+
+    def body(carry, layer_params):
+        y, _, _ = layer_apply(layer_params, cfg, "enc_attn", carry,
+                              positions, mode="train", cache=None)
+        return y, None
+
+    body_fn = _remat(body, cfg)
+    if cfg.scan_layers:
+        x, _ = jax.lax.scan(body_fn, x, params["encoder"])
+    else:
+        for i in range(cfg.n_encoder_layers):
+            x, _ = body_fn(x, jax.tree_util.tree_map(
+                lambda a: a[i], params["encoder"]))
+    return nn.apply_norm(params["enc_norm"], cfg.norm, x)
+
+
+def forward(params, cfg: ModelConfig, *, tokens=None, embeddings=None,
+            positions=None, mode: str = "train", cache=None, enc_out=None,
+            skip_unembed: bool = False):
+    """Decoder-side forward.
+
+    Returns (logits_or_hidden, new_cache, aux_loss). ``cache`` must be a
+    full cache tree (prefill/decode) or None (train).
+    """
+    dtype = jnp.dtype(cfg.dtype)
+    if embeddings is None:
+        x = nn.embed(params["embed"], tokens, dtype) * cfg.embedding_multiplier
+    else:
+        x = embeddings.astype(dtype) * cfg.embedding_multiplier
+    B, S = x.shape[:2]
+    if positions is None:
+        positions = jnp.broadcast_to(jnp.arange(S), (B, S))
+    pos2d = positions[0] if positions.ndim == 3 else positions
+    if cfg.rope_style == "learned":
+        table = params["pos_embed"]["table"].astype(dtype)
+        x = x + jnp.take(table, jnp.clip(pos2d, 0, table.shape[0] - 1),
+                         axis=0)
+    x = nn.constrain(x, "data", None, None)
+
+    full_cache = cache if cache is not None else no_cache_tree(cfg)
+    new_cache: Dict[str, Any] = {}
+    aux_total = jnp.zeros((), jnp.float32)
+
+    for group, pattern in (("head", cfg.head_pattern),):
+        if not pattern:
+            continue
+        outs = []
+        for lp, kind, c in zip(params[group], pattern, full_cache[group]):
+            x, c2, aux = layer_apply(lp, cfg, kind, x, positions, mode=mode,
+                                     cache=c, enc_out=enc_out)
+            outs.append(c2)
+            aux_total = aux_total + aux
+        new_cache[group] = outs
+
+    def period_body(carry, xs):
+        x, aux_acc = carry
+        lps, cs = xs
+        new_cs = []
+        for i, kind in enumerate(cfg.body_pattern):
+            x, c2, aux = layer_apply(lps[i], cfg, kind, x, positions,
+                                     mode=mode, cache=cs[i], enc_out=enc_out)
+            new_cs.append(c2)
+            aux_acc = aux_acc + aux
+        return (x, aux_acc), new_cs
+
+    if cfg.scan_layers:
+        (x, aux_total), new_body = jax.lax.scan(
+            _remat(period_body, cfg), (x, aux_total),
+            (params["body"], full_cache["body"]))
+    else:
+        body_fn = _remat(period_body, cfg)
+        outs = []
+        carry = (x, aux_total)
+        for p in range(cfg.n_periods):
+            sl = lambda t: jax.tree_util.tree_map(lambda a: a[p], t)
+            carry, new_cs = body_fn(carry, (sl(params["body"]),
+                                            sl(full_cache["body"])))
+            outs.append(new_cs)
+        x, aux_total = carry
+        new_body = jax.tree_util.tree_map(
+            lambda *xs: jnp.stack(xs), *outs) if outs else []
+    new_cache["body"] = new_body
+
+    for group, pattern in (("tail", cfg.tail_pattern),):
+        if not pattern:
+            continue
+        outs = []
+        for lp, kind, c in zip(params[group], pattern, full_cache[group]):
+            x, c2, aux = layer_apply(lp, cfg, kind, x, positions, mode=mode,
+                                     cache=c, enc_out=enc_out)
+            outs.append(c2)
+            aux_total = aux_total + aux
+        new_cache[group] = outs
+
+    x = nn.apply_norm(params["final_norm"], cfg.norm, x)
+    if skip_unembed:
+        return x, (new_cache if cache is not None else None), aux_total
+    logits = unembed(params, cfg, x)
+    return logits, (new_cache if cache is not None else None), aux_total
+
+
+def unembed(params, cfg: ModelConfig, x):
+    if cfg.tie_embeddings:
+        logits = nn.unembed(params["embed"], x)
+    else:
+        logits = nn.linear(params["lm_head"], x)
+    logits = logits / cfg.logits_scaling
+    return nn.constrain(logits, "data", None, "model")
+
+
+# ---------------------------------------------------------------------------
+# Losses / steps
+# ---------------------------------------------------------------------------
+
+def cross_entropy(logits, labels):
+    """Mean CE in f32; logits (..., V), labels (...) int32."""
+    logits = logits.astype(jnp.float32)
+    m = jax.lax.stop_gradient(jnp.max(logits, -1, keepdims=True))
+    shifted = logits - m
+    lse = jnp.log(jnp.sum(jnp.exp(shifted), -1)) + m[..., 0]
+    correct = jnp.take_along_axis(logits, labels[..., None], -1)[..., 0]
+    return jnp.mean(lse - correct)
+
+
+def loss_fn(params, cfg: ModelConfig, batch):
+    """batch keys: tokens|embeddings, labels, [positions], [frames].
+
+    Returns (total_loss, metrics).
+    """
+    enc_out = None
+    if cfg.n_encoder_layers:
+        enc_out = run_encoder(
+            params, cfg, batch["frames"].astype(jnp.dtype(cfg.dtype)))
+    kwargs = dict(mode="train", cache=None, enc_out=enc_out)
+    if "positions" in batch:
+        kwargs["positions"] = batch["positions"]
+    if "embeddings" in batch:
+        kwargs["embeddings"] = batch["embeddings"]
+    else:
+        kwargs["tokens"] = batch["tokens"]
+
+    labels = batch["labels"]
+    S = labels.shape[1]
+    if cfg.chunked_ce > 0 and S % cfg.chunked_ce == 0:
+        hidden, _, aux = forward(params, cfg, skip_unembed=True, **kwargs)
+        C = cfg.chunked_ce
+        B = labels.shape[0]
+        hc = jnp.moveaxis(hidden.reshape(B, S // C, C, -1), 1, 0)
+        yc = jnp.moveaxis(labels.reshape(B, S // C, C), 1, 0)
+
+        def body(acc, xs):
+            h_i, y_i = xs
+            return acc + cross_entropy(unembed(params, cfg, h_i), y_i), None
+
+        total, _ = jax.lax.scan(jax.checkpoint(body),
+                                jnp.zeros((), jnp.float32), (hc, yc))
+        ce = total * (C / S)
+    else:
+        logits, _, aux = forward(params, cfg, **kwargs)
+        ce = cross_entropy(logits, labels)
+    return ce + aux, {"ce": ce, "aux": aux}
+
+
+def prefill(params, cfg: ModelConfig, cache, *, tokens=None, embeddings=None,
+            positions=None, frames=None):
+    """Run the full prompt, fill caches, return (last_logits, cache)."""
+    enc_out = None
+    if cfg.n_encoder_layers:
+        enc_out = run_encoder(
+            params, cfg, frames.astype(jnp.dtype(cfg.dtype)))
+    hidden, new_cache, _ = forward(
+        params, cfg, tokens=tokens, embeddings=embeddings,
+        positions=positions, mode="prefill", cache=cache, enc_out=enc_out,
+        skip_unembed=True)
+    logits = unembed(params, cfg, hidden[:, -1:])
+    return logits[:, 0], new_cache
+
+
+def decode_step(params, cfg: ModelConfig, tokens, pos, cache):
+    """One token for every sequence. tokens (B,1); pos (B,) absolute."""
+    positions = pos[:, None]
+    if cfg.rope_style == "mrope":
+        positions = jnp.broadcast_to(positions[None], (3,) + positions.shape)
+    logits, new_cache, _ = forward(params, cfg, tokens=tokens,
+                                   positions=positions, mode="decode",
+                                   cache=cache)
+    return logits[:, 0], new_cache

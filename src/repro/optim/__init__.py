@@ -1,0 +1,14 @@
+"""Optimizers and distributed-optimization tricks (no optax)."""
+
+from repro.optim.adamw import AdamW, OptState
+from repro.optim.schedule import cosine_schedule, linear_warmup
+from repro.optim.compress import compress_gradients, decompress_gradients
+
+__all__ = [
+    "AdamW",
+    "OptState",
+    "cosine_schedule",
+    "linear_warmup",
+    "compress_gradients",
+    "decompress_gradients",
+]

@@ -1,0 +1,118 @@
+"""AdamW with global-norm clipping and optional ZeRO-1 state sharding.
+
+State is a pytree mirroring params: {"m": tree, "v": tree, "step": scalar}.
+``zero1_specs`` derives PartitionSpecs for m/v that additionally shard the
+first replicated axis over "data" (ZeRO-1: optimizer state partitioned
+across the data-parallel group; XLA inserts the corresponding
+reduce-scatter / all-gather pair around the update).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.common.tree import tree_global_norm
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class OptState:
+    m: Any
+    v: Any
+    step: jnp.ndarray
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamW:
+    lr: Callable[[jnp.ndarray], jnp.ndarray] | float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+    state_dtype: Any = jnp.float32
+
+    def init(self, params) -> OptState:
+        zeros = lambda t: jax.tree_util.tree_map(
+            lambda x: jnp.zeros(x.shape, self.state_dtype), t)
+        return OptState(m=zeros(params), v=zeros(params),
+                        step=jnp.zeros((), jnp.int32))
+
+    def abstract_state(self, abstract_params) -> OptState:
+        sd = lambda t: jax.tree_util.tree_map(
+            lambda x: jax.ShapeDtypeStruct(x.shape, self.state_dtype), t)
+        return OptState(m=sd(abstract_params), v=sd(abstract_params),
+                        step=jax.ShapeDtypeStruct((), jnp.int32))
+
+    def _lr(self, step):
+        return self.lr(step) if callable(self.lr) else self.lr
+
+    def update(self, grads, state: OptState, params):
+        """Returns (new_params, new_state, metrics)."""
+        gnorm = tree_global_norm(grads)
+        scale = jnp.minimum(1.0, self.clip_norm / jnp.maximum(gnorm, 1e-9))
+        step = state.step + 1
+        lr = self._lr(step)
+        b1c = 1.0 - self.b1 ** step.astype(jnp.float32)
+        b2c = 1.0 - self.b2 ** step.astype(jnp.float32)
+
+        def upd(g, m, v, p):
+            g = g.astype(jnp.float32) * scale
+            m2 = self.b1 * m + (1 - self.b1) * g
+            v2 = self.b2 * v + (1 - self.b2) * g * g
+            mhat = m2 / b1c
+            vhat = v2 / b2c
+            delta = mhat / (jnp.sqrt(vhat) + self.eps)
+            if self.weight_decay and p.ndim >= 2:  # no decay on norms/bias
+                delta = delta + self.weight_decay * p.astype(jnp.float32)
+            p2 = p.astype(jnp.float32) - lr * delta
+            return (p2.astype(p.dtype), m2.astype(self.state_dtype),
+                    v2.astype(self.state_dtype))
+
+        flat_p, treedef = jax.tree_util.tree_flatten(params)
+        flat_g = treedef.flatten_up_to(grads)
+        flat_m = treedef.flatten_up_to(state.m)
+        flat_v = treedef.flatten_up_to(state.v)
+        out = [upd(g, m, v, p)
+               for g, m, v, p in zip(flat_g, flat_m, flat_v, flat_p)]
+        new_p = treedef.unflatten([o[0] for o in out])
+        new_m = treedef.unflatten([o[1] for o in out])
+        new_v = treedef.unflatten([o[2] for o in out])
+        return new_p, OptState(new_m, new_v, step), {"grad_norm": gnorm,
+                                                     "lr": lr}
+
+
+def zero1_specs(param_specs, abstract_params, data_axis: str = "data",
+                data_size: int = 0):
+    """ZeRO-1: shard optimizer moments over the data axis.
+
+    For each parameter, find the first dimension that is unsharded in its
+    PartitionSpec and divisible by the data-axis size, and shard it over
+    ``data_axis``. Falls back to the parameter's own spec.
+    """
+
+    def one(spec, aps):
+        if not isinstance(spec, P):
+            spec = P()
+        parts = list(spec) + [None] * (len(aps.shape) - len(spec))
+        for i, (axis_part, dim) in enumerate(zip(parts, aps.shape)):
+            if axis_part is None and data_size and dim % data_size == 0:
+                parts[i] = data_axis
+                return P(*parts)
+        return P(*parts) if parts else P()
+
+    return jax.tree_util.tree_map(
+        one, param_specs, abstract_params,
+        is_leaf=lambda x: isinstance(x, P))
+
+
+def opt_state_specs(param_specs, abstract_params, *, zero1: bool = True,
+                    data_axis: str = "data", data_size: int = 0) -> OptState:
+    mv = (zero1_specs(param_specs, abstract_params, data_axis, data_size)
+          if zero1 else param_specs)
+    return OptState(m=mv, v=mv, step=P())

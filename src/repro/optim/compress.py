@@ -1,0 +1,48 @@
+"""Int8 gradient compression with error feedback.
+
+For DP all-reduce at 1000+ node scale, gradients are quantized to int8
+with a per-tensor scale before the cross-pod reduction; the quantization
+residual is carried in an error-feedback buffer so the compression is
+unbiased over time (EF-SGD). Used by the train step when
+``grad_compression=True``: the quantize -> psum -> dequantize pattern
+lets XLA run the collective on 1/4 of the bytes on the slow (DCN/pod)
+axis.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def _quantize(x: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    xf = x.astype(jnp.float32)
+    scale = jnp.maximum(jnp.max(jnp.abs(xf)), 1e-12) / 127.0
+    q = jnp.clip(jnp.round(xf / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def compress_gradients(grads, error_buf=None):
+    """Returns ((q_tree, scale_tree), new_error_buf)."""
+    if error_buf is None:
+        error_buf = jax.tree_util.tree_map(
+            lambda g: jnp.zeros_like(g, jnp.float32), grads)
+    corrected = jax.tree_util.tree_map(
+        lambda g, e: g.astype(jnp.float32) + e, grads, error_buf)
+    qs = jax.tree_util.tree_map(_quantize, corrected)
+    q_tree = jax.tree_util.tree_map(lambda t: t[0], qs,
+                                    is_leaf=lambda t: isinstance(t, tuple))
+    s_tree = jax.tree_util.tree_map(lambda t: t[1], qs,
+                                    is_leaf=lambda t: isinstance(t, tuple))
+    deq = jax.tree_util.tree_map(
+        lambda q, s: q.astype(jnp.float32) * s, q_tree, s_tree)
+    new_err = jax.tree_util.tree_map(
+        lambda c, d: c - d, corrected, deq)
+    return (q_tree, s_tree), new_err
+
+
+def decompress_gradients(q_tree, s_tree):
+    return jax.tree_util.tree_map(
+        lambda q, s: q.astype(jnp.float32) * s, q_tree, s_tree)

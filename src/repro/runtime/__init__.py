@@ -1,0 +1,18 @@
+"""Distributed runtime: Perona watchdog, fault tolerance, stragglers.
+
+This is where the paper's fingerprinting becomes a first-class training
+feature: nodes are ranked before mesh construction, re-fingerprinted
+periodically, and degradation detections drive exclusion + elastic
+restart from checkpoint (DESIGN.md §2).
+"""
+
+from repro.runtime.watchdog import PeronaWatchdog
+from repro.runtime.fault import TrainingRuntime, FailureInjector
+from repro.runtime.straggler import StragglerMonitor
+
+__all__ = [
+    "PeronaWatchdog",
+    "TrainingRuntime",
+    "FailureInjector",
+    "StragglerMonitor",
+]

@@ -1,0 +1,93 @@
+"""Perona degradation watchdog (paper §III-C applied to a live cluster).
+
+Periodically re-fingerprints cluster nodes with the standardized suite,
+pushes the new executions through the trained Perona model, and flags
+nodes whose anomaly probability stays above threshold. Following the
+paper's discussion of false positives, a flag is only *confirmed* after
+``confirm_runs`` consecutive anomalous re-benchmarks — a cheap operation
+(each benchmark runs seconds) relative to excluding a healthy node.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Sequence
+
+import numpy as np
+
+from repro.core.graph_data import build_graphs
+from repro.core.model import PeronaModel
+from repro.core.preprocess import Preprocessor
+from repro.core.trainer import batch_to_jnp
+from repro.fingerprint.records import BenchmarkExecution
+
+
+@dataclasses.dataclass
+class WatchdogDecision:
+    node: str
+    anomaly_prob: float
+    flagged: bool
+    confirmed: bool
+
+
+class PeronaWatchdog:
+    def __init__(self, model: PeronaModel, params, preproc: Preprocessor,
+                 threshold: float = 0.5, confirm_runs: int = 2):
+        self.model = model
+        self.params = params
+        self.preproc = preproc
+        self.threshold = threshold
+        self.confirm_runs = confirm_runs
+        self._strikes: Dict[str, int] = {}
+        self.history: List[BenchmarkExecution] = []
+
+    def observe(self, records: Sequence[BenchmarkExecution]
+                ) -> List[WatchdogDecision]:
+        """Score a new fingerprinting round (records from the suite
+        runner) in the context of previous rounds."""
+        self.history.extend(records)
+        # bounded context: keep the last 64 runs per (type, machine)
+        self.history = self._trim(self.history)
+        batch = build_graphs(self.history, self.preproc)
+        import jax
+
+        out = self.model.forward(self.params, batch_to_jnp(batch),
+                                 train=False)
+        prob = np.asarray(jax.nn.sigmoid(out["anom_logit"]))
+        new_ids = {id(r) for r in records}
+        decisions = {}
+        for i, rec in enumerate(self.history):
+            if id(rec) not in new_ids:
+                continue
+            node = rec.machine
+            p = float(prob[i])
+            worst = max(p, decisions.get(node, (0.0,))[0]) \
+                if node in decisions else p
+            decisions[node] = (worst,)
+        out_decisions = []
+        for node, (p,) in sorted(decisions.items()):
+            flagged = p >= self.threshold
+            if flagged:
+                self._strikes[node] = self._strikes.get(node, 0) + 1
+            else:
+                self._strikes[node] = 0
+            confirmed = self._strikes[node] >= self.confirm_runs
+            out_decisions.append(WatchdogDecision(
+                node=node, anomaly_prob=p, flagged=flagged,
+                confirmed=confirmed))
+        return out_decisions
+
+    def _trim(self, records, keep: int = 64):
+        buckets: Dict = {}
+        for r in records:
+            buckets.setdefault((r.benchmark_type, r.machine), []).append(r)
+        out = []
+        for items in buckets.values():
+            items.sort(key=lambda r: r.t)
+            out.extend(items[-keep:])
+        out.sort(key=lambda r: r.t)
+        return out
+
+    def excluded_nodes(self) -> List[str]:
+        return [n for n, s in self._strikes.items()
+                if s >= self.confirm_runs]

@@ -1,0 +1,20 @@
+"""Resource-configuration tuning (paper §IV-D/E).
+
+Re-implementations of CherryPick (Bayesian optimization) and Arrow
+(augmented BO with low-level metrics), a scout-like dataset simulator
+(18 workloads x 69 AWS configs), Perona's acquisition weighting, and the
+scientific-workflow integrations (Lotaru runtime prediction, Tarema node
+grouping).
+"""
+
+from repro.tuning.scout import ScoutDataset
+from repro.tuning.cherrypick import CherryPick
+from repro.tuning.arrow import Arrow
+from repro.tuning.perona_weights import PeronaAcquisitionWeighter
+
+__all__ = [
+    "ScoutDataset",
+    "CherryPick",
+    "Arrow",
+    "PeronaAcquisitionWeighter",
+]

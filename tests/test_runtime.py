@@ -1,0 +1,127 @@
+"""Runtime: straggler detection, Perona watchdog, fault-tolerant loop."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpointing.manager import CheckpointManager
+from repro.data.tokens import TokenPipeline
+from repro.runtime.fault import FailureInjector, TrainingRuntime
+from repro.runtime.straggler import StragglerMonitor
+from repro.runtime.watchdog import PeronaWatchdog
+
+
+def test_straggler_monitor_flags_persistent_slow_host():
+    mon = StragglerMonitor(ratio_threshold=1.3, patience=3)
+    flagged = []
+    for step in range(10):
+        times = {"h0": 100.0, "h1": 100.0, "h2": 100.0, "h3": 250.0}
+        flagged += mon.record_step(step, times)
+    assert any(ev.host == "h3" for ev in flagged)
+    assert not any(ev.host in ("h0", "h1", "h2") for ev in flagged)
+
+
+def test_straggler_monitor_ignores_transient_blip():
+    # a single 4x blip decays through the EWMA within ~5 steps
+    # (log(1.3/4)/log(1-alpha) with alpha=0.3), so patience=6 must not
+    # fire while patience=3 would — the knob separates transient
+    # interference from persistent degradation
+    mon = StragglerMonitor(ratio_threshold=1.3, patience=6, alpha=0.3)
+    flagged = []
+    for step in range(14):
+        slow = 400.0 if step == 5 else 100.0
+        flagged += mon.record_step(step, {"a": 100.0, "b": 100.0,
+                                          "c": slow})
+    assert not flagged
+
+
+@pytest.fixture(scope="module")
+def small_watchdog():
+    from repro.core.graph_data import build_graphs
+    from repro.core.model import PeronaConfig, PeronaModel
+    from repro.core.preprocess import Preprocessor
+    from repro.core.trainer import train_perona
+    from repro.fingerprint.runner import SuiteRunner
+
+    runner = SuiteRunner(seed=11)
+    machines = {"good-0": "n2-standard-4", "good-1": "n2-standard-4"}
+    records = runner.run(machines, runs_per_type=40, stress_fraction=0.2)
+    pre = Preprocessor().fit(records)
+    batch = build_graphs(records, pre)
+    cfg = PeronaConfig(feature_dim=pre.feature_dim,
+                       edge_dim=batch.edge.shape[-1])
+    model = PeronaModel(cfg)
+    res = train_perona(model, batch, epochs=60, seed=2)
+    wd = PeronaWatchdog(model, res.params, pre, confirm_runs=2)
+    wd.history = list(records)
+    return wd, runner, machines
+
+
+def test_watchdog_confirms_degraded_node(small_watchdog):
+    wd, runner, machines = small_watchdog
+    # two consecutive fully-degraded fingerprint rounds on good-1
+    for _ in range(2):
+        recs = runner.run({"good-1": "n2-standard-4"}, runs_per_type=2,
+                          degraded_machines=["good-1"])
+        decisions = wd.observe(recs)
+    assert "good-1" in wd.excluded_nodes()
+
+
+def test_watchdog_passes_healthy_node(small_watchdog):
+    wd, runner, machines = small_watchdog
+    wd._strikes.clear()
+    for _ in range(3):
+        recs = runner.run({"good-0": "n2-standard-4"}, runs_per_type=2)
+        wd.observe(recs)
+    assert "good-0" not in wd.excluded_nodes()
+
+
+def _runtime(tmp_path, fail_at=None, steps_between_ckpt=5):
+    pipeline = TokenPipeline(vocab_size=64, seq_len=8, global_batch=2,
+                             seed=0)
+    seen_batches = []
+
+    def init_state(hosts):
+        return {"w": jnp.zeros(()), "n": jnp.zeros(())}
+
+    def train_step(state, batch, hosts):
+        seen_batches.append(int(np.asarray(batch["tokens"]).sum()))
+        new = {"w": state["w"] + 1.0, "n": state["n"] + 1.0}
+        return new, {"loss": float(new["w"])}
+
+    rt = TrainingRuntime(
+        hosts=["h0", "h1", "h2", "h3"], train_step=train_step,
+        init_state=init_state, pipeline=pipeline,
+        ckpt=CheckpointManager(tmp_path, async_save=False),
+        checkpoint_every=steps_between_ckpt,
+        failure_injector=FailureInjector(
+            {fail_at: ["h2"]} if fail_at else None))
+    return rt, seen_batches
+
+
+def test_runtime_runs_to_completion(tmp_path):
+    rt, _ = _runtime(tmp_path)
+    out = rt.run(12)
+    assert len(out["losses"]) == 12
+    assert out["restarts"] == 0
+
+
+def test_runtime_recovers_from_failure(tmp_path):
+    rt, seen = _runtime(tmp_path, fail_at=8)
+    out = rt.run(12)
+    assert out["restarts"] == 1
+    assert "h2" not in out["final_hosts"]
+    # restored from step 5 checkpoint -> steps 6,7 replayed; the replayed
+    # batches are identical to the originals (deterministic pipeline)
+    assert any(ev.kind == "failure" for ev in out["events"])
+    # final step count preserved: w == number of *effective* steps
+    assert float(np.asarray(out["state"]["w"])) >= 12 - 1
+
+
+def test_runtime_restart_resumes_from_checkpoint(tmp_path):
+    rt, _ = _runtime(tmp_path)
+    rt.run(11)  # checkpoints at 0,5,10
+    rt2, _ = _runtime(tmp_path)
+    out = rt2.run(12)  # should resume at 11, run one step
+    assert any(ev.kind == "restart" for ev in out["events"])
+    assert len(out["losses"]) == 1

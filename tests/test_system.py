@@ -1,0 +1,93 @@
+"""End-to-end behaviour: the paper's §IV-C reproduction targets."""
+
+import numpy as np
+import pytest
+
+
+def test_acquisition_scale(paper_records):
+    # 3 nodes x 6 types x 100 runs = 1800, ~20% stressed
+    assert len(paper_records) == 1800
+    frac = np.mean([r.stressed for r in paper_records])
+    assert 0.15 < frac < 0.25
+    assert len({r.machine for r in paper_records}) == 3
+    assert len({r.benchmark_type for r in paper_records}) == 6
+
+
+def test_metric_reduction(fitted):
+    pre = fitted["pre"]
+    # paper: 153 raw -> 54 selected; simulated suite: ~159 raw, and the
+    # selection must discard a substantial fraction (constants + echoes)
+    assert 140 <= pre.raw_feature_count <= 175
+    assert pre.n_selected < pre.raw_feature_count - 40
+    assert pre.feature_dim == pre.n_selected + 6
+
+
+def test_split_stratified(fitted):
+    # every node appears in every split (paper's node stratification)
+    for key in ("train_records", "val_records", "test_records"):
+        assert len({r.machine for r in fitted[key]}) == 3
+
+
+def test_paper_quality_targets(trained_perona, fitted):
+    from repro.core.trainer import evaluate
+
+    model, params = trained_perona
+    m = evaluate(model, params, fitted["test"])
+    # paper: MSE ~0.01, type acc 100%, F1(normal) 0.93, F1(outlier) 0.75,
+    # weighted acc 90% — thresholds leave margin for seed variation
+    assert m["mse"] <= 0.03, m
+    assert m["type_accuracy"] >= 0.98, m
+    assert m["f1_normal"] >= 0.90, m
+    assert m["f1_outlier"] >= 0.65, m
+    assert m["weighted_accuracy"] >= 0.85, m
+
+
+def test_codes_cluster_by_type(trained_perona, fitted):
+    """TML objective: same-type codes closer (cosine) than cross-type."""
+    from repro.core.trainer import batch_to_jnp
+
+    model, params = trained_perona
+    out = model.forward(params, batch_to_jnp(fitted["test"]), train=False)
+    codes = np.asarray(out["codes"])
+    types = fitted["test"].type_id
+    c = codes / np.maximum(
+        np.linalg.norm(codes, axis=-1, keepdims=True), 1e-9)
+    sim = c @ c.T
+    same = types[:, None] == types[None, :]
+    np.fill_diagonal(same, False)
+    intra = sim[same].mean()
+    inter = sim[~same].mean()
+    # codes share a dominant direction (inputs live in (0,1)), so the
+    # cosine gap is modest — but type clusters are linearly separable
+    # (test_paper_quality_targets asserts the 100% linear probe)
+    assert intra > inter + 0.05, (intra, inter)
+
+
+def test_ranking_orders_machines_by_capability(trained_perona):
+    """Ranking: faster machine types must receive higher scores."""
+    from repro.core.graph_data import build_graphs
+    from repro.core.ranking import aspect_scores, rank_machines
+    from repro.core.trainer import batch_to_jnp
+    from repro.fingerprint.runner import SuiteRunner
+    from repro.core.preprocess import Preprocessor
+    from repro.core.model import PeronaConfig, PeronaModel
+    from repro.core.trainer import train_perona
+
+    # stress injection aids orientation detection (paper §III-B:
+    # "Occasionally injecting synthetic stress into running benchmarks
+    # further helps in identifying the orientation of a metric")
+    runner = SuiteRunner(seed=3)
+    machines = {"slow": "e2-medium", "fast": "c2-standard-4"}
+    records = runner.run(machines, runs_per_type=30, stress_fraction=0.15)
+    pre = Preprocessor().fit(records)
+    batch = build_graphs(records, pre)
+    cfg = PeronaConfig(feature_dim=pre.feature_dim,
+                       edge_dim=batch.edge.shape[-1])
+    model = PeronaModel(cfg)
+    res = train_perona(model, batch, epochs=60, seed=1)
+    out = model.forward(res.params, batch_to_jnp(batch), train=False)
+    scores = aspect_scores(np.asarray(out["codes"]),
+                           [r.benchmark_type for r in records],
+                           [r.machine for r in records])
+    ranked = rank_machines(scores, aspect="cpu")
+    assert ranked[0] == "fast", scores

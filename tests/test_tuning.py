@@ -1,0 +1,138 @@
+"""Tuning stack: scout sim, GP, CherryPick/Arrow (+Perona), Lotaru,
+Tarema — the paper's §IV-D/E integration claims."""
+
+import numpy as np
+import pytest
+
+from repro.tuning.arrow import Arrow
+from repro.tuning.cherrypick import CherryPick
+from repro.tuning.gp import GP, expected_improvement
+from repro.tuning.scout import ScoutDataset, WORKLOAD_NAMES
+
+
+@pytest.fixture(scope="module")
+def ds():
+    return ScoutDataset(seed=0)
+
+
+@pytest.fixture(scope="module")
+def machine_scores():
+    from repro.tuning.perona_weights import fingerprint_machine_scores
+
+    return fingerprint_machine_scores(
+        ("m4.large", "m4.xlarge", "m4.2xlarge", "c4.large", "c4.xlarge",
+         "c4.2xlarge", "r4.large", "r4.xlarge", "r4.2xlarge"),
+        runs_per_type=10, epochs=40, return_calibration=True)
+
+
+def test_scout_dataset_shape(ds):
+    # 18 workloads x 69 configurations = 1242 runs (paper §IV-D)
+    assert len(ds.configs) == 69
+    assert len(ds.workloads) == 18
+    assert len(ds.configs) * len(ds.workloads) == 1242
+
+
+def test_scout_runtimes_scale_sanely(ds):
+    from repro.tuning.scout import CloudConfig
+
+    wl = WORKLOAD_NAMES[0]
+    small = ds.runtime_s(wl, CloudConfig("m4.large", 4))
+    big = ds.runtime_s(wl, CloudConfig("m4.2xlarge", 4))
+    assert big < small  # more cores -> faster
+    assert ds.cost_usd(wl, CloudConfig("m4.large", 4)) > 0
+
+
+def test_gp_interpolates_training_points():
+    rng = np.random.default_rng(0)
+    X = rng.normal(size=(20, 3))
+    y = np.sin(X[:, 0]) + X[:, 1] ** 2
+    gp = GP(noise=1e-6).fit(X, y)
+    mu, sigma = gp.predict(X)
+    np.testing.assert_allclose(mu, y, atol=1e-2)
+    assert np.all(sigma < 0.2)
+
+
+def test_expected_improvement_prefers_low_mean_high_var():
+    ei = expected_improvement(np.asarray([1.0, 0.1, 1.0]),
+                              np.asarray([0.1, 0.1, 2.0]), best=0.5)
+    assert ei[1] > ei[0]
+    assert ei[2] > ei[0]
+
+
+def test_cherrypick_finds_valid_config(ds):
+    wl = WORKLOAD_NAMES[1]
+    rts = [ds.runtime_s(wl, c) for c in ds.configs]
+    limit = float(np.percentile(rts, 40))
+    trace = CherryPick(ds, limit, seed=0).search(wl)
+    assert trace.best_valid_cost[-1] < np.inf
+    assert len(trace.evaluated) <= 9
+    # found config actually satisfies the constraint
+    costs = [(c, co, r) for c, co, r in
+             zip(trace.evaluated, trace.costs, trace.runtimes)
+             if r <= limit]
+    assert min(co for _, co, _ in costs) == trace.best_valid_cost[-1]
+
+
+def test_perona_weighting_no_worse_on_average(ds, machine_scores):
+    """Fig-5 claim: Perona-weighted acquisition finds configurations at
+    least as cheap (median over workloads) by the final profiling run."""
+    from repro.tuning.perona_weights import PeronaAcquisitionWeighter
+
+    scores, _ = machine_scores
+    weighter = PeronaAcquisitionWeighter(ds, scores)
+    base_final, perona_final = [], []
+    for wl in WORKLOAD_NAMES[:6]:
+        rts = [ds.runtime_s(wl, c) for c in ds.configs]
+        limit = float(np.percentile(rts, 40))
+        t0 = CherryPick(ds, limit, seed=1).search(wl)
+        t1 = CherryPick(ds, limit, seed=1,
+                        acquisition_weighter=weighter).search(wl)
+        base_final.append(t0.best_valid_cost[-1])
+        perona_final.append(t1.best_valid_cost[-1])
+    assert np.median(perona_final) <= np.median(base_final) * 1.05
+
+
+def test_arrow_perona_uses_scores_before_any_run(ds, machine_scores):
+    from repro.core.ranking import machine_score_vector
+
+    scores, _ = machine_scores
+    low_fn = lambda wl, c: machine_score_vector(scores, c.vm_type)
+    wl = WORKLOAD_NAMES[2]
+    rts = [ds.runtime_s(wl, c) for c in ds.configs]
+    limit = float(np.percentile(rts, 40))
+    trace = Arrow(ds, limit, low_level_fn=low_fn, seed=0).search(wl)
+    assert trace.best_valid_cost[-1] < np.inf
+
+
+def test_lotaru_tableIII_ordering(machine_scores):
+    """Benchmark-based predictors must beat naive/online baselines, and
+    Perona must land within ~2x of Lotaru (paper: +1.74% median)."""
+    from repro.tuning import lotaru
+    from repro.tuning.perona_weights import calibrate_scores, \
+        fingerprint_machine_scores
+
+    scores, proxies = fingerprint_machine_scores(
+        ("e2-medium", "n1-standard-4", "n2-standard-4", "c2-standard-4"),
+        runs_per_type=10, epochs=40, return_calibration=True)
+    cal = calibrate_scores(scores, proxies)
+    tab = lotaru.evaluate_predictors(cal)
+    assert tab["lotaru"]["median"] < tab["naive"]["median"]
+    assert tab["perona"]["median"] < tab["naive"]["median"]
+    assert tab["perona"]["median"] < 2.0 * tab["lotaru"]["median"] + 0.02
+
+
+def test_tarema_same_groups():
+    from repro.tuning import tarema
+    from repro.tuning.perona_weights import calibrate_scores, \
+        fingerprint_machine_scores
+
+    scores, proxies = fingerprint_machine_scores(
+        ("e2-medium", "n1-standard-4", "n2-standard-4", "c2-standard-4"),
+        runs_per_type=10, epochs=40, return_calibration=True)
+    cal = calibrate_scores(scores, proxies)
+    machines = {"a": "n1-standard-4", "b": "n1-standard-4",
+                "c": "n2-standard-4", "d": "c2-standard-4",
+                "e": "e2-medium"}
+    g_micro = tarema.groups_from_microbenchmarks(machines)
+    g_perona = tarema.groups_from_perona(machines, cal)
+    assert tarema.same_grouping(g_micro, g_perona)
