@@ -10,6 +10,10 @@ Because the in-degree is fixed, the whole dataset is one dense batch:
   x (N, F'), nbr (N, P) int32 (-1 = missing), edge (N, P, A),
   types/labels/norm ground truth per node — no scatter/gather graphs
 (TPU adaptation; DESIGN.md §3).
+
+Construction is columnar: chain membership, predecessor indices and
+edge attributes are derived with one lexsort + shifted-array ops over
+the :class:`BenchmarkFrame` (record lists are converted on entry).
 """
 
 from __future__ import annotations
@@ -20,6 +24,7 @@ from typing import Dict, List, Optional, Sequence, Tuple
 import numpy as np
 
 from repro.core.preprocess import Preprocessor
+from repro.fingerprint.frame import BenchmarkFrame, FrameOrRecords, as_frame
 from repro.fingerprint.records import BenchmarkExecution
 
 P_PREDECESSORS = 3
@@ -56,67 +61,125 @@ class PeronaBatch:
             chain=self.chain[idx])
 
 
-def _time_encodings(dt: float, t_src: float) -> List[float]:
+def time_encodings(dt: np.ndarray, t_src: np.ndarray) -> np.ndarray:
+    """(..., 4) time-interval/hour-of-day encodings, vectorized."""
+    dt = np.asarray(dt, np.float64)
+    t_src = np.asarray(t_src, np.float64)
     hod = (t_src / 3600.0) % 24.0
-    return [
-        float(np.log1p(dt) / 12.0),
-        float(min(dt / 3600.0, 1.0)),
-        0.5 + 0.5 * float(np.sin(2 * np.pi * hod / 24)),
-        0.5 + 0.5 * float(np.cos(2 * np.pi * hod / 24)),
-    ]
+    ang = 2 * np.pi * hod / 24
+    return np.stack([
+        np.log1p(dt) / 12.0,
+        np.minimum(dt / 3600.0, 1.0),
+        0.5 + 0.5 * np.sin(ang),
+        0.5 + 0.5 * np.cos(ang),
+    ], axis=-1)
 
 
-def build_graphs(records: Sequence[BenchmarkExecution],
+@dataclasses.dataclass
+class GraphStructure:
+    """Statistics-free graph topology of a frame: predecessor indices
+    within each (benchmark type x machine) chain + raw time terms.
+    Feature/edge *values* are attached separately (numpy in
+    ``build_graphs``, inside the jit in ``serving.FingerprintEngine``).
+    """
+
+    nbr: np.ndarray  # (N, P) int32, -1 = missing
+    nbr_mask: np.ndarray  # (N, P) bool
+    chain: np.ndarray  # (N,) int32 dense chain ids
+    dt: np.ndarray  # (N, P) float64 time gap to predecessor (0 if none)
+    t_src: np.ndarray  # (N, P) float64 predecessor timestamp (0 if none)
+
+
+def graph_structure(frame: BenchmarkFrame,
+                    p: int = P_PREDECESSORS) -> GraphStructure:
+    n = len(frame)
+    # chain key ordered like the record path: sorted (type name, machine
+    # name) tuples -> ranks of the sorted vocabularies
+    bt_rank = np.argsort(np.argsort(frame.benchmark_types))
+    m_rank = np.argsort(np.argsort(frame.machines))
+    key = (bt_rank[frame.type_code].astype(np.int64)
+           * max(len(frame.machines), 1) + m_rank[frame.machine_code])
+    chain = np.unique(key, return_inverse=True)[1].astype(np.int32)
+
+    # stable (chain, t, row) order; the record path sorts chains by key
+    # and chain members chronologically with stable ties
+    order = np.lexsort((np.arange(n), frame.t, key))
+    key_sorted = key[order]
+    boundary = np.ones(n, bool)
+    boundary[1:] = key_sorted[1:] != key_sorted[:-1]
+    chain_start = np.maximum.accumulate(
+        np.where(boundary, np.arange(n), 0))
+
+    nbr = -np.ones((n, p), np.int32)
+    dt = np.zeros((n, p), np.float64)
+    t_src = np.zeros((n, p), np.float64)
+    pos = np.arange(n)
+    for q in range(p):
+        src = pos - 1 - q
+        valid = src >= chain_start
+        j = np.where(valid, order[np.maximum(src, 0)], -1)
+        rows = order[valid]
+        nbr[rows, q] = j[valid]
+        jj = j[valid]
+        dt[rows, q] = np.maximum(frame.t[rows] - frame.t[jj], 0.0)
+        t_src[rows, q] = frame.t[jj]
+    return GraphStructure(nbr=nbr, nbr_mask=nbr >= 0, chain=chain,
+                          dt=dt, t_src=t_src)
+
+
+def build_graphs(data: FrameOrRecords,
                  preproc: Preprocessor) -> PeronaBatch:
-    x = preproc.transform(records)
-    edge_feats = preproc.transform_edges(records)
-    A = edge_feats.shape[1] + 4
-    N = len(records)
-    type_id = np.asarray([preproc.type_id(r) for r in records], np.int32)
-    anomaly = np.asarray([int(r.stressed) for r in records], np.int32)
+    frame = as_frame(data)
+    x = preproc.transform(frame)
+    edge_feats = preproc.transform_edges(frame)
+    n = len(frame)
+    a = edge_feats.shape[1] + 4
+    type_id = preproc.type_ids(frame)
+    anomaly = frame.stressed.astype(np.int32)
     norm_gt = preproc.groundtruth_norm(x)
 
-    chains: Dict[Tuple[str, str], List[int]] = {}
-    for i, r in enumerate(records):
-        chains.setdefault((r.benchmark_type, r.machine), []).append(i)
-
-    nbr = -np.ones((N, P_PREDECESSORS), np.int32)
-    edge = np.zeros((N, P_PREDECESSORS, A), np.float32)
-    chain_id = np.zeros((N,), np.int32)
-    for cid, (key, idxs) in enumerate(sorted(chains.items())):
-        idxs = sorted(idxs, key=lambda i: records[i].t)
-        for pos, i in enumerate(idxs):
-            chain_id[i] = cid
-            preds = idxs[max(0, pos - P_PREDECESSORS):pos]
-            for p, j in enumerate(reversed(preds)):
-                nbr[i, p] = j
-                dt = max(records[i].t - records[j].t, 0.0)
-                edge[i, p] = np.concatenate([
-                    edge_feats[j],
-                    np.asarray(_time_encodings(dt, records[j].t)),
-                ])
+    gs = graph_structure(frame)
+    edge = np.zeros((n, P_PREDECESSORS, a), np.float32)
+    src = np.maximum(gs.nbr, 0)
+    vals = np.concatenate(
+        [edge_feats[src], time_encodings(gs.dt, gs.t_src)], axis=-1)
+    edge[:] = np.where(gs.nbr_mask[..., None], vals, 0.0)
     return PeronaBatch(
-        x=x.astype(np.float32), type_id=type_id, anomaly=anomaly, nbr=nbr,
-        nbr_mask=nbr >= 0, edge=edge, norm_gt=norm_gt.astype(np.float32),
-        machine=[r.machine for r in records], chain=chain_id)
+        x=x.astype(np.float32), type_id=type_id, anomaly=anomaly,
+        nbr=gs.nbr, nbr_mask=gs.nbr_mask, edge=edge,
+        norm_gt=norm_gt.astype(np.float32),
+        machine=frame.machine_names(), chain=gs.chain)
 
 
-def chronological_split(records: Sequence[BenchmarkExecution],
-                        fractions=(0.6, 0.2, 0.2)):
+def chronological_split(data: FrameOrRecords, fractions=(0.6, 0.2, 0.2)):
     """Per-(machine x type) chronological split (every node appears in
     every split — the paper's node-name stratification — while graph
-    edges stay causal)."""
-    chains: Dict[Tuple[str, str], List[int]] = {}
-    for i, r in enumerate(records):
-        chains.setdefault((r.benchmark_type, r.machine), []).append(i)
-    train, val, test = [], [], []
-    for idxs in chains.values():
-        idxs = sorted(idxs, key=lambda i: records[i].t)
-        n = len(idxs)
-        a = int(n * fractions[0])
-        b = int(n * (fractions[0] + fractions[1]))
-        train += idxs[:a]
-        val += idxs[a:b]
-        test += idxs[b:]
-    pick = lambda ids: [records[i] for i in sorted(ids)]
-    return pick(train), pick(val), pick(test)
+    edges stay causal). Frames in, frames out; record lists in, record
+    lists out."""
+    frame = as_frame(data)
+    is_frame = isinstance(data, BenchmarkFrame)
+    n = len(frame)
+    key = (frame.type_code.astype(np.int64)
+           * max(len(frame.machines), 1) + frame.machine_code)
+    order = np.lexsort((np.arange(n), frame.t, key))
+    key_sorted = key[order]
+    boundary = np.ones(n, bool)
+    boundary[1:] = key_sorted[1:] != key_sorted[:-1]
+    start = np.maximum.accumulate(np.where(boundary, np.arange(n), 0))
+    # chain length / position via next-boundary distance
+    idx_of_start = np.where(boundary)[0]
+    lengths = np.diff(np.append(idx_of_start, n))
+    length_per_row = np.repeat(lengths, lengths)
+    pos = np.arange(n) - start
+    a = (length_per_row * fractions[0]).astype(np.int64)
+    b = (length_per_row * (fractions[0] + fractions[1])).astype(np.int64)
+    split_sorted = np.where(pos < a, 0, np.where(pos < b, 1, 2))
+    split = np.empty(n, np.int64)
+    split[order] = split_sorted
+
+    out = []
+    for s in range(3):
+        idx = np.sort(np.nonzero(split == s)[0])
+        sub = frame.select(idx)
+        out.append(sub if is_frame else sub.to_records())
+    return tuple(out)

@@ -18,6 +18,10 @@ Ordered steps, all statistics fitted on training executions only:
 5. Imputation   — metrics absent for a benchmark type are filled with
    the so-far-observed (training) mean of that metric.
 6. Enrichment   — one-hot encoding of the benchmark type is appended.
+
+All stages operate on the columnar :class:`BenchmarkFrame`; record
+lists are accepted everywhere and converted on entry, so the historical
+record-list API keeps working.
 """
 
 from __future__ import annotations
@@ -27,6 +31,7 @@ from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
+from repro.fingerprint.frame import BenchmarkFrame, FrameOrRecords, as_frame
 from repro.fingerprint.records import BenchmarkExecution
 
 # unit -> (canonical family, multiplier)
@@ -54,6 +59,41 @@ def unify(value: float, unit: str) -> float:
     return float(value) * mult
 
 
+def _unit_multipliers(units: Sequence[str]) -> np.ndarray:
+    return np.asarray([UNIT_TABLE.get(u, ("unknown", 1.0))[1]
+                       for u in units], np.float64)
+
+
+def _merged_columns(frame: BenchmarkFrame
+                    ) -> Tuple[List[str], np.ndarray, np.ndarray]:
+    """Unify units and merge same-name metric columns (a frame keys
+    columns by (name, unit); one record reports one unit per name, so at
+    most one cell per row is present within a name group).
+
+    Returns (names, values (N, G), present (N, G)); group order is
+    first-appearance column order.
+    """
+    uni = frame.metrics * _unit_multipliers(frame.metric_units)
+    pres = frame.metrics_present
+    groups: Dict[str, List[int]] = {}
+    for i, name in enumerate(frame.metric_names):
+        groups.setdefault(name, []).append(i)
+    names = list(groups)
+    n = len(frame)
+    values = np.zeros((n, len(names)), np.float64)
+    present = np.zeros((n, len(names)), bool)
+    for g, (name, cols) in enumerate(groups.items()):
+        if len(cols) == 1:
+            values[:, g] = np.where(pres[:, cols[0]], uni[:, cols[0]], 0.0)
+            present[:, g] = pres[:, cols[0]]
+        else:
+            for c in cols:
+                sel = pres[:, c]
+                values[sel, g] = uni[sel, c]
+                present[:, g] |= sel
+    return names, values, present
+
+
 @dataclasses.dataclass
 class Preprocessor:
     std_threshold: float = 0.02
@@ -73,16 +113,15 @@ class Preprocessor:
     edge_names: Optional[List[str]] = None
 
     # ------------------------------------------------------------------ fit
-    def fit(self, records: Sequence[BenchmarkExecution]) -> "Preprocessor":
-        values: Dict[str, List[float]] = {}
-        for r in records:
-            for name, (v, unit) in r.metrics.items():
-                values.setdefault(name, []).append(unify(v, unit))
-        self.raw_feature_count = len(values)
+    def fit(self, data: FrameOrRecords) -> "Preprocessor":
+        frame = as_frame(data)
+        names, values, present = _merged_columns(frame)
+        self.raw_feature_count = len(names)
+        gidx = {n: i for i, n in enumerate(names)}
 
         selected = []
-        for name in sorted(values):
-            arr = np.asarray(values[name], np.float64)
+        for name in sorted(names):
+            arr = values[present[:, gidx[name]], gidx[name]]
             if len(np.unique(np.round(arr, 12))) < 2:
                 continue
             std = float(np.std(arr))
@@ -100,44 +139,56 @@ class Preprocessor:
         self.lo = np.zeros((F,))
         self.hi = np.ones((F,))
         for i, name in enumerate(selected):
-            arr = np.asarray(values[name], np.float64)
+            arr = values[present[:, gidx[name]], gidx[name]]
             mx, mn, med = float(arr.max()), float(arr.min()), float(
                 np.median(arr))
             self.maximize[i] = (mx - med) <= (med - mn)
             self.lo[i] = mn
             self.hi[i] = mx if mx > mn else mn + 1.0
 
-        self.benchmark_types = sorted({r.benchmark_type for r in records})
+        self.benchmark_types = sorted(
+            frame.benchmark_types[c] for c in np.unique(frame.type_code))
 
         # normalized-space training means per feature, for imputation
-        raw, present = self._raw_matrix(records)
+        # (reuse the merged columns from selection — no second pass)
+        raw, fpresent = self._select_features(frame, (names, values,
+                                                      present))
         norm = self._normalize(raw)
-        cnt = np.maximum(present.sum(0), 1)
-        self.fill_mean = (norm * present).sum(0) / cnt
+        cnt = np.maximum(fpresent.sum(0), 1)
+        self.fill_mean = (norm * fpresent).sum(0) / cnt
 
         # edge-attribute scaler (node metrics during the run)
-        self.edge_names = sorted(
-            {k for r in records for k in r.node_metrics})
-        em = np.asarray([[r.node_metrics.get(k, 0.0)
-                          for k in self.edge_names] for r in records])
+        ecols = [i for i, n in enumerate(frame.node_metric_names)
+                 if frame.node_metrics_present[:, i].any()]
+        self.edge_names = sorted(frame.node_metric_names[i] for i in ecols)
+        em = self.raw_edges(frame)
         self.edge_lo = em.min(0)
         self.edge_hi = np.where(em.max(0) > em.min(0), em.max(0),
                                 em.min(0) + 1.0)
         return self
 
     # ------------------------------------------------------------ transform
-    def _raw_matrix(self, records) -> Tuple[np.ndarray, np.ndarray]:
+    def raw_features(self, data: FrameOrRecords
+                     ) -> Tuple[np.ndarray, np.ndarray]:
+        """Unified (pre-normalization) values of the selected features:
+        (N, F') values + presence mask. Feature columns missing from the
+        frame come back absent (imputed downstream)."""
+        frame = as_frame(data)
+        return self._select_features(frame, _merged_columns(frame))
+
+    def _select_features(self, frame, merged):
+        names, values, present = merged
+        gidx = {n: i for i, n in enumerate(names)}
         F = len(self.feature_names)
-        idx = {n: i for i, n in enumerate(self.feature_names)}
-        raw = np.zeros((len(records), F))
-        present = np.zeros((len(records), F), bool)
-        for j, r in enumerate(records):
-            for name, (v, unit) in r.metrics.items():
-                i = idx.get(name)
-                if i is not None:
-                    raw[j, i] = unify(v, unit)
-                    present[j, i] = True
-        return raw, present
+        raw = np.zeros((len(frame), F))
+        fpresent = np.zeros((len(frame), F), bool)
+        for i, name in enumerate(self.feature_names):
+            g = gidx.get(name)
+            if g is None:
+                continue
+            raw[:, i] = values[:, g]
+            fpresent[:, i] = present[:, g]
+        return raw, fpresent
 
     def _normalize(self, raw: np.ndarray) -> np.ndarray:
         norm = (raw - self.lo) / (self.hi - self.lo)
@@ -145,20 +196,44 @@ class Preprocessor:
         # orientation: flip minimized metrics so larger is always better
         return np.where(self.maximize, norm, 1.0 - norm)
 
-    def transform(self, records: Sequence[BenchmarkExecution]) -> np.ndarray:
+    def type_ids(self, frame: BenchmarkFrame) -> np.ndarray:
+        """(N,) int32 indices into the fitted ``benchmark_types``."""
+        tindex = {t: i for i, t in enumerate(self.benchmark_types)}
+        lut = np.asarray([tindex.get(t, -1) for t in
+                          frame.benchmark_types], np.int32)
+        ids = lut[frame.type_code]
+        if len(ids) and ids.min() < 0:
+            bad = frame.benchmark_types[
+                int(frame.type_code[np.argmin(ids)])]
+            raise KeyError(f"benchmark type {bad!r} was not fitted")
+        return ids
+
+    def transform(self, data: FrameOrRecords) -> np.ndarray:
         """Returns x' (N, F' + n_types) in (0,1)."""
-        raw, present = self._raw_matrix(records)
+        frame = as_frame(data)
+        raw, present = self.raw_features(frame)
         norm = self._normalize(raw)
         norm = np.where(present, norm, self.fill_mean)
-        onehot = np.zeros((len(records), len(self.benchmark_types)))
-        tindex = {t: i for i, t in enumerate(self.benchmark_types)}
-        for j, r in enumerate(records):
-            onehot[j, tindex[r.benchmark_type]] = 1.0
+        onehot = np.zeros((len(frame), len(self.benchmark_types)))
+        onehot[np.arange(len(frame)), self.type_ids(frame)] = 1.0
         return np.concatenate([norm, onehot], axis=1)
 
-    def transform_edges(self, records) -> np.ndarray:
-        em = np.asarray([[r.node_metrics.get(k, 0.0)
-                          for k in self.edge_names] for r in records])
+    def raw_edges(self, data: FrameOrRecords) -> np.ndarray:
+        """Raw (unscaled) node-metric matrix in fitted ``edge_names``
+        column order; absent gauges are 0 (as in the record path)."""
+        frame = as_frame(data)
+        nidx = {n: i for i, n in enumerate(frame.node_metric_names)}
+        em = np.zeros((len(frame), len(self.edge_names)))
+        for j, name in enumerate(self.edge_names):
+            c = nidx.get(name)
+            if c is None:
+                continue
+            em[:, j] = np.where(frame.node_metrics_present[:, c],
+                                frame.node_metrics[:, c], 0.0)
+        return em
+
+    def transform_edges(self, data: FrameOrRecords) -> np.ndarray:
+        em = self.raw_edges(data)
         return np.clip((em - self.edge_lo) / (self.edge_hi - self.edge_lo),
                        0.0, 1.0)
 

@@ -8,11 +8,16 @@ heteroscedastic noise and ChaosMesh-style stress injection (DESIGN.md
 """
 
 from repro.fingerprint.records import BenchmarkExecution
+from repro.fingerprint.frame import (BenchmarkFrame, as_frame,
+                                     concat_frames)
 from repro.fingerprint.machines import MACHINE_PROFILES, MachineProfile
 from repro.fingerprint.runner import SuiteRunner, BENCHMARK_TYPES
 
 __all__ = [
     "BenchmarkExecution",
+    "BenchmarkFrame",
+    "as_frame",
+    "concat_frames",
     "MachineProfile",
     "MACHINE_PROFILES",
     "SuiteRunner",

@@ -5,14 +5,23 @@ type is executed ``runs_per_type`` times, quasi-randomly spread over the
 experiment window; network benchmarks are serialized cluster-wide (only
 one in flight); a configurable fraction of runs receives ChaosMesh-style
 stress on the benchmarked resource.
+
+Acquisition is *columnar*: ``run_frame`` batches the RNG draws per
+(machine type x benchmark type) group — one vectorized draw per metric
+column — and materializes a :class:`BenchmarkFrame` directly, instead of
+looping records x tools x metrics in Python. ``run`` keeps the
+record-list API as a thin conversion wrapper, and ``run_reference`` is
+the original per-record loop, retained as the benchmarking baseline
+(see ``benchmarks/bench_fingerprint.py``).
 """
 
 from __future__ import annotations
 
-from typing import Dict, List, Optional, Sequence
+from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
+from repro.fingerprint.frame import BenchmarkFrame
 from repro.fingerprint.machines import MACHINE_PROFILES
 from repro.fingerprint.records import BenchmarkExecution
 from repro.fingerprint.tools import EXTRA_CONSTANTS, TOOLS, node_metrics
@@ -28,24 +37,166 @@ _ASPECT = {
     "iperf3": "network",
 }
 
+# metric column layout per benchmark type: (name, unit) in tool order,
+# resolved lazily from one probe draw + the constant echoes
+_COLUMNS_CACHE: Dict[str, List[Tuple[str, str]]] = {}
+
+
+def _columns_of(btype: str) -> List[Tuple[str, str]]:
+    cols = _COLUMNS_CACHE.get(btype)
+    if cols is None:
+        probe = TOOLS[btype](MACHINE_PROFILES["e2-medium"],
+                             np.random.default_rng(0), np.zeros(1))
+        cols = [(name, unit) for name, (_, unit) in probe.items()]
+        cols += [(name, unit)
+                 for name, (_, unit) in EXTRA_CONSTANTS[btype].items()]
+        _COLUMNS_CACHE[btype] = cols
+    return cols
+
 
 class SuiteRunner:
     def __init__(self, seed: int = 0, duration_s: float = 86400.0):
         self.rng = np.random.default_rng(seed)
         self.duration_s = duration_s
 
+    # ------------------------------------------------------------ columnar
+    def run_frame(self, machines: Dict[str, str], runs_per_type: int,
+                  stress_fraction: float = 0.0,
+                  degraded_machines: Optional[Sequence[str]] = None,
+                  ) -> BenchmarkFrame:
+        """Columnar acquisition. ``machines``: {node_name: machine_type}.
+        ``degraded_machines`` are permanently degraded (every run
+        stressed) — used by the runtime watchdog tests."""
+        degraded = set(degraded_machines or ())
+        node_names = list(machines)
+        mtype_vocab = list(dict.fromkeys(machines.values()))
+        node_code = {n: i for i, n in enumerate(node_names)}
+        mtype_code = {m: i for i, m in enumerate(mtype_vocab)}
+
+        # global metric column layout (union over benchmark types)
+        col_index: Dict[Tuple[str, str], int] = {}
+        for btype in BENCHMARK_TYPES:
+            for key in _columns_of(btype):
+                col_index.setdefault(key, len(col_index))
+        node_cols = list(node_metrics(
+            MACHINE_PROFILES["e2-medium"], np.random.default_rng(0),
+            np.zeros(1), "cpu"))
+        ncol_index = {k: i for i, k in enumerate(node_cols)}
+
+        n_nodes = len(node_names)
+        N = n_nodes * len(BENCHMARK_TYPES) * runs_per_type
+        metrics = np.zeros((N, len(col_index)), np.float64)
+        present = np.zeros((N, len(col_index)), bool)
+        nmetrics = np.zeros((N, len(node_cols)), np.float64)
+        type_code = np.empty(N, np.int32)
+        machine_code = np.empty(N, np.int32)
+        machine_type_code = np.empty(N, np.int32)
+        t = np.empty(N, np.float64)
+        stressed_all = np.empty(N, bool)
+
+        # cluster-wide serialized slots for the network benchmarks: one
+        # sorted pool, randomly assigned, so only one network benchmark
+        # is in flight at any time
+        n_net = sum(runs_per_type * n_nodes
+                    for b in BENCHMARK_TYPES if _ASPECT[b] == "network")
+        net_slots = np.sort(self.rng.uniform(0, self.duration_s, n_net))
+        net_order = self.rng.permutation(n_net)
+        net_used = 0
+
+        # group rows by (benchmark type x machine type): profile constant
+        # within a group, so every metric is one batched draw
+        nodes_by_mtype: Dict[str, List[str]] = {}
+        for node, mtype in machines.items():
+            nodes_by_mtype.setdefault(mtype, []).append(node)
+
+        off = 0
+        for btype in BENCHMARK_TYPES:
+            aspect = _ASPECT[btype]
+            bt_code = BENCHMARK_TYPES.index(btype)
+            cols = np.asarray([col_index[key] for key in
+                               _columns_of(btype)], np.int64)
+            n_tool_cols = len(cols) - len(EXTRA_CONSTANTS[btype])
+            for mtype, nodes in nodes_by_mtype.items():
+                profile = MACHINE_PROFILES[mtype]
+                R = len(nodes) * runs_per_type
+                sl = slice(off, off + R)
+                rows_node = np.repeat(
+                    np.asarray([node_code[n] for n in nodes], np.int32),
+                    runs_per_type)
+                if aspect == "network":
+                    slots = net_slots[net_order[net_used:net_used + R]]
+                    net_used += R
+                    t[sl] = slots
+                else:
+                    t[sl] = self.rng.uniform(0, self.duration_s, R)
+                degraded_mask = np.isin(
+                    rows_node,
+                    [node_code[n] for n in degraded if n in node_code])
+                stressed = degraded_mask | (
+                    self.rng.random(R) < stress_fraction)
+                severity = np.where(
+                    stressed, self.rng.uniform(0.15, 1.0, R), 0.0)
+
+                md = TOOLS[btype](profile, self.rng, severity)
+                block = np.empty((R, len(cols)), np.float64)
+                for j, (name, (vals, _unit)) in enumerate(md.items()):
+                    block[:, j] = vals
+                for j, (name, (v, _unit)) in enumerate(
+                        EXTRA_CONSTANTS[btype].items()):
+                    block[:, n_tool_cols + j] = v
+                metrics[sl, cols] = block
+                present[sl, cols] = True
+
+                nd = node_metrics(profile, self.rng, severity, aspect)
+                for name, vals in nd.items():
+                    nmetrics[sl, ncol_index[name]] = vals
+
+                type_code[sl] = bt_code
+                machine_code[sl] = rows_node
+                machine_type_code[sl] = mtype_code[mtype]
+                stressed_all[sl] = stressed
+                off += R
+
+        frame = BenchmarkFrame(
+            benchmark_types=BENCHMARK_TYPES,
+            machines=tuple(node_names),
+            machine_types=tuple(mtype_vocab),
+            metric_names=tuple(k[0] for k in col_index),
+            metric_units=tuple(k[1] for k in col_index),
+            node_metric_names=tuple(node_cols),
+            type_code=type_code, machine_code=machine_code,
+            machine_type_code=machine_type_code, t=t,
+            stressed=stressed_all,
+            metrics=metrics, metrics_present=present,
+            node_metrics=nmetrics,
+            node_metrics_present=np.ones_like(nmetrics, bool))
+        return frame.sort_by_time()
+
+    # ----------------------------------------------------- record wrapper
     def run(self, machines: Dict[str, str], runs_per_type: int,
             stress_fraction: float = 0.0,
             degraded_machines: Optional[Sequence[str]] = None,
             ) -> List[BenchmarkExecution]:
-        """machines: {node_name: machine_type}. ``degraded_machines`` are
-        permanently degraded (every run stressed) — used by the runtime
-        watchdog tests."""
+        """Record-list acquisition (conversion wrapper over
+        :meth:`run_frame`)."""
+        return self.run_frame(machines, runs_per_type, stress_fraction,
+                              degraded_machines).to_records()
+
+    # ------------------------------------------------------ seed baseline
+    def run_reference(self, machines: Dict[str, str], runs_per_type: int,
+                      stress_fraction: float = 0.0,
+                      degraded_machines: Optional[Sequence[str]] = None,
+                      ) -> List[BenchmarkExecution]:
+        """The original per-record triple loop (node x type x run, one
+        tool-simulator call per record). Kept as the acquisition
+        throughput baseline; statistically equivalent to ``run_frame``
+        but draws the RNG stream in a different order."""
         degraded = set(degraded_machines or ())
         records: List[BenchmarkExecution] = []
         net_slots = iter(np.sort(self.rng.uniform(
             0, self.duration_s,
             2 * runs_per_type * max(len(machines), 1) + 8)))
+        one = np.ones(1)
         for node, mtype in machines.items():
             profile = MACHINE_PROFILES[mtype]
             for btype in BENCHMARK_TYPES:
@@ -56,10 +207,14 @@ class SuiteRunner:
                     stressed = (node in degraded or
                                 bool(self.rng.random() < stress_fraction))
                     severity = (float(self.rng.uniform(0.15, 1.0))
-                                if stressed else 0.0)
+                                if stressed else 0.0) * one
                     if aspect == "network":
                         t = float(next(net_slots))  # serialized slot
-                    metrics = dict(TOOLS[btype](profile, self.rng, severity))
+                    metrics = {
+                        name: (float(vals[0]), unit)
+                        for name, (vals, unit) in TOOLS[btype](
+                            profile, self.rng, severity).items()
+                    }
                     metrics.update(EXTRA_CONSTANTS[btype])
                     records.append(BenchmarkExecution(
                         benchmark_type=btype,
@@ -67,9 +222,11 @@ class SuiteRunner:
                         machine_type=mtype,
                         t=float(t),
                         metrics=metrics,
-                        node_metrics=node_metrics(profile, self.rng,
-                                                  severity, aspect),
-                        stressed=stressed,
+                        node_metrics={
+                            k: float(v[0]) for k, v in node_metrics(
+                                profile, self.rng, severity,
+                                aspect).items()},
+                        stressed=bool(stressed),
                     ))
         records.sort(key=lambda r: r.t)
         return records
@@ -78,6 +235,13 @@ class SuiteRunner:
 def paper_acquisition(seed: int = 0) -> List[BenchmarkExecution]:
     """§IV-C setup: 3 benchmarking nodes (e2-medium), 6 types x 100 runs
     each, 20% stressed -> 1800 executions."""
+    return paper_acquisition_frame(seed).to_records()
+
+
+def paper_acquisition_frame(seed: int = 0) -> BenchmarkFrame:
+    """Columnar §IV-C acquisition (same content as
+    :func:`paper_acquisition`, no record conversion)."""
     runner = SuiteRunner(seed=seed)
     machines = {f"node-{i}": "e2-medium" for i in range(1, 4)}
-    return runner.run(machines, runs_per_type=100, stress_fraction=0.2)
+    return runner.run_frame(machines, runs_per_type=100,
+                            stress_fraction=0.2)

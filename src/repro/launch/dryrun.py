@@ -59,7 +59,7 @@ def _compile(cfg, shape, mesh, layout: str = "2d", donate: bool = False):
 
 
 def _costs(compiled):
-    ca = compiled.cost_analysis()
+    ca = rl.cost_analysis_dict(compiled)
     coll = rl.collective_bytes(compiled.as_text())
     return {
         "flops": float(ca.get("flops", 0.0)),

@@ -86,7 +86,7 @@ def main() -> None:
                 in_shardings=(pshard, oshard, bshard)).lower(
                     aparams, astate, batch)
             compiled = lowered.compile()
-        ca = compiled.cost_analysis()
+        ca = rl.cost_analysis_dict(compiled)
         coll = rl.collective_bytes(compiled.as_text())
         flops = float(ca.get("flops", 0.0))
         record.update({

@@ -15,6 +15,16 @@ import jax
 import numpy as np
 
 
+def _make_mesh(shape, axes, devices):
+    """jax.make_mesh across jax versions: ``axis_types`` exists only on
+    newer releases (and older ones default to Auto anyway)."""
+    if hasattr(jax.sharding, "AxisType"):
+        return jax.make_mesh(
+            shape, axes, devices=devices,
+            axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return jax.make_mesh(shape, axes, devices=devices)
+
+
 def make_production_mesh(*, multi_pod: bool = False):
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
@@ -26,18 +36,14 @@ def make_production_mesh(*, multi_pod: bool = False):
             "the dry-run launcher must set "
             "XLA_FLAGS=--xla_force_host_platform_device_count=512 before "
             "any jax import")
-    return jax.make_mesh(shape, axes, devices=devices[:need],
-                         axis_types=(jax.sharding.AxisType.Auto,)
-                         * len(axes))
+    return _make_mesh(shape, axes, devices[:need])
 
 
 def make_debug_mesh(n_data: int = 2, n_model: int = 2):
     """Small mesh for tests (requires >= n_data*n_model host devices)."""
     need = n_data * n_model
     devices = jax.devices()[:need]
-    return jax.make_mesh((n_data, n_model), ("data", "model"),
-                         devices=devices,
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    return _make_mesh((n_data, n_model), ("data", "model"), devices)
 
 
 def data_axes(mesh) -> Tuple[str, ...]:

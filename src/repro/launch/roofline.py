@@ -67,6 +67,19 @@ def _group_size(line: str) -> int:
     return 2
 
 
+def cost_analysis_dict(compiled) -> Dict[str, float]:
+    """``Compiled.cost_analysis()`` returns a dict on new jax and a
+    one-element list of dicts on older releases — normalize to a dict."""
+    ca = compiled.cost_analysis()
+    if isinstance(ca, (list, tuple)):
+        out: Dict[str, float] = {}
+        for entry in ca:
+            for k, v in entry.items():
+                out[k] = out.get(k, 0.0) + float(v)
+        return out
+    return dict(ca)
+
+
 def collective_bytes(hlo_text: str) -> Dict[str, int]:
     """Per-opcode *wire* bytes per device (ring-model) of collectives.
 

@@ -9,6 +9,14 @@ into it (single-sequence prefill), and all occupied slots decode in
 lockstep with one jit'd decode_step per token. The same serve_step is
 what the decode_32k / long_500k dry-run cells lower onto the production
 meshes.
+
+``--fingerprint`` serves Perona fingerprint scoring instead: rounds of
+benchmark executions stream through the shared
+:class:`repro.serving.FingerprintEngine` (the same shape-bucketed jit
+call the runtime watchdog uses), amortizing one compile across rounds:
+
+    PYTHONPATH=src python -m repro.launch.serve --fingerprint \
+        --rounds 20
 """
 
 from __future__ import annotations
@@ -126,6 +134,47 @@ def merge_cache_slot(cache_old, cache_new, slot: int):
     return out
 
 
+def serve_fingerprints(rounds: int, runs_per_type: int = 2,
+                       seed: int = 0) -> dict:
+    """Fingerprint-scoring service loop: train a small Perona model,
+    then stream scoring rounds through the shared FingerprintEngine
+    (one compile amortized over all rounds)."""
+    from repro.core.graph_data import build_graphs
+    from repro.core.model import PeronaConfig, PeronaModel
+    from repro.core.preprocess import Preprocessor
+    from repro.core.trainer import train_perona
+    from repro.fingerprint.runner import SuiteRunner
+    from repro.runtime.watchdog import PeronaWatchdog
+    from repro.serving.engine import FingerprintEngine
+
+    runner = SuiteRunner(seed=seed)
+    machines = {f"serve-{i}": "e2-medium" for i in range(3)}
+    frame = runner.run_frame(machines, runs_per_type=40,
+                             stress_fraction=0.2)
+    pre = Preprocessor().fit(frame)
+    batch = build_graphs(frame, pre)
+    cfg = PeronaConfig(feature_dim=pre.feature_dim,
+                       edge_dim=batch.edge.shape[-1])
+    model = PeronaModel(cfg)
+    res = train_perona(model, batch, epochs=40, seed=seed)
+
+    engine = FingerprintEngine(model, res.params, pre)
+    wd = PeronaWatchdog(model, res.params, pre, engine=engine,
+                        history_per_chain=40)
+    wd.history = frame
+    t0 = time.time()
+    scored = 0
+    for _ in range(rounds):
+        round_frame = runner.run_frame(machines,
+                                       runs_per_type=runs_per_type)
+        wd.observe(round_frame)
+        scored += len(round_frame)
+    dt = time.time() - t0
+    return {"rounds": rounds, "scored": scored, "seconds": dt,
+            "traces": engine.trace_count,
+            "excluded": wd.excluded_nodes()}
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="smollm-135m")
@@ -135,7 +184,18 @@ def main() -> None:
     ap.add_argument("--max-len", type=int, default=128)
     ap.add_argument("--scale", choices=["full", "small"], default="small")
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--fingerprint", action="store_true",
+                    help="serve Perona fingerprint scoring rounds")
+    ap.add_argument("--rounds", type=int, default=10)
     args = ap.parse_args()
+
+    if args.fingerprint:
+        out = serve_fingerprints(args.rounds, seed=args.seed)
+        print(f"[serve-fp] {out['rounds']} rounds, {out['scored']} "
+              f"executions, {out['seconds']:.2f}s "
+              f"({out['scored'] / max(out['seconds'], 1e-9):.0f} exec/s), "
+              f"{out['traces']} compiles, excluded={out['excluded']}")
+        return
 
     cfg = get_config(args.arch)
     if args.scale == "small":

@@ -51,7 +51,12 @@ def strip_model_axis(spec_tree):
                 out.append(None)
             elif isinstance(e, (tuple, list)):
                 kept = tuple(a for a in e if a != "model")
-                out.append(kept if kept else None)
+                if not kept:
+                    out.append(None)
+                elif len(kept) == 1:
+                    out.append(kept[0])
+                else:
+                    out.append(kept)
             else:
                 out.append(e)
         return P(*out)

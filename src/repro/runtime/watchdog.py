@@ -6,6 +6,16 @@ nodes whose anomaly probability stays above threshold. Following the
 paper's discussion of false positives, a flag is only *confirmed* after
 ``confirm_runs`` consecutive anomalous re-benchmarks — a cheap operation
 (each benchmark runs seconds) relative to excluding a healthy node.
+
+The rolling history is held as a columnar :class:`BenchmarkFrame` and
+scored through the shared :class:`FingerprintEngine`, so repeated
+rounds amortize a single compiled scoring call (shape-bucketed jit)
+instead of re-tracing the model every round. A node is flagged in a
+round only when a *quorum* of its new executions scores anomalous —
+one noisy run cannot flag a healthy node (the seed used the max
+probability, which false-positived healthy nodes into exclusion) —
+strikes reset on clean rounds, and only confirmed flags
+(``confirm_runs`` consecutive anomalous rounds) exclude a node.
 """
 
 from __future__ import annotations
@@ -15,78 +25,108 @@ from typing import Dict, List, Optional, Sequence
 
 import numpy as np
 
-from repro.core.graph_data import build_graphs
 from repro.core.model import PeronaModel
 from repro.core.preprocess import Preprocessor
-from repro.core.trainer import batch_to_jnp
+from repro.fingerprint.frame import (BenchmarkFrame, FrameOrRecords,
+                                     as_frame, concat_frames)
 from repro.fingerprint.records import BenchmarkExecution
+from repro.serving.engine import FingerprintEngine
 
 
 @dataclasses.dataclass
 class WatchdogDecision:
     node: str
-    anomaly_prob: float
+    anomaly_prob: float  # mean probability over the round's executions
+    flag_fraction: float  # share of the round's executions >= threshold
     flagged: bool
     confirmed: bool
 
 
 class PeronaWatchdog:
     def __init__(self, model: PeronaModel, params, preproc: Preprocessor,
-                 threshold: float = 0.5, confirm_runs: int = 2):
+                 threshold: float = 0.5, confirm_runs: int = 2,
+                 quorum: float = 1 / 3,
+                 engine: Optional[FingerprintEngine] = None,
+                 history_per_chain: int = 64):
         self.model = model
         self.params = params
         self.preproc = preproc
         self.threshold = threshold
+        self.quorum = quorum
         self.confirm_runs = confirm_runs
+        self.history_per_chain = history_per_chain
+        self.engine = engine or FingerprintEngine(model, params, preproc)
         self._strikes: Dict[str, int] = {}
-        self.history: List[BenchmarkExecution] = []
+        self._frame: Optional[BenchmarkFrame] = None
 
-    def observe(self, records: Sequence[BenchmarkExecution]
-                ) -> List[WatchdogDecision]:
-        """Score a new fingerprinting round (records from the suite
-        runner) in the context of previous rounds."""
-        self.history.extend(records)
-        # bounded context: keep the last 64 runs per (type, machine)
-        self.history = self._trim(self.history)
-        batch = build_graphs(self.history, self.preproc)
-        import jax
+    # ------------------------------------------------------------- history
+    @property
+    def history(self) -> List[BenchmarkExecution]:
+        """Rolling context as records (compat view of the frame)."""
+        return [] if self._frame is None else self._frame.to_records()
 
-        out = self.model.forward(self.params, batch_to_jnp(batch),
-                                 train=False)
-        prob = np.asarray(jax.nn.sigmoid(out["anom_logit"]))
-        new_ids = {id(r) for r in records}
-        decisions = {}
-        for i, rec in enumerate(self.history):
-            if id(rec) not in new_ids:
-                continue
-            node = rec.machine
-            p = float(prob[i])
-            worst = max(p, decisions.get(node, (0.0,))[0]) \
-                if node in decisions else p
-            decisions[node] = (worst,)
-        out_decisions = []
-        for node, (p,) in sorted(decisions.items()):
-            flagged = p >= self.threshold
+    @history.setter
+    def history(self, data: FrameOrRecords) -> None:
+        self._frame = as_frame(data) if len(data) else None
+
+    @property
+    def history_frame(self) -> Optional[BenchmarkFrame]:
+        return self._frame
+
+    # ------------------------------------------------------------- observe
+    def observe(self, data: FrameOrRecords) -> List[WatchdogDecision]:
+        """Score a new fingerprinting round (frame or records from the
+        suite runner) in the context of previous rounds."""
+        new = as_frame(data)
+        n_new = len(new)
+        combined = (new if self._frame is None
+                    else concat_frames([self._frame, new]))
+        first_new = len(combined) - n_new
+        keep = self._trim_indices(combined, self.history_per_chain)
+        is_new = keep >= first_new
+        self._frame = combined.select(keep)
+
+        prob = self.engine.score(self._frame).anomaly_prob
+
+        # per-node quorum over this round's executions
+        codes = self._frame.machine_code[is_new]
+        probs = prob[is_new]
+        decisions = []
+        for code in np.unique(codes):
+            node = self._frame.machines[code]
+            p_runs = probs[codes == code]
+            frac = float((p_runs >= self.threshold).mean())
+            flagged = frac >= self.quorum
             if flagged:
                 self._strikes[node] = self._strikes.get(node, 0) + 1
             else:
                 self._strikes[node] = 0
             confirmed = self._strikes[node] >= self.confirm_runs
-            out_decisions.append(WatchdogDecision(
-                node=node, anomaly_prob=p, flagged=flagged,
+            decisions.append(WatchdogDecision(
+                node=node, anomaly_prob=float(p_runs.mean()),
+                flag_fraction=frac, flagged=flagged,
                 confirmed=confirmed))
-        return out_decisions
+        decisions.sort(key=lambda d: d.node)
+        return decisions
 
-    def _trim(self, records, keep: int = 64):
-        buckets: Dict = {}
-        for r in records:
-            buckets.setdefault((r.benchmark_type, r.machine), []).append(r)
-        out = []
-        for items in buckets.values():
-            items.sort(key=lambda r: r.t)
-            out.extend(items[-keep:])
-        out.sort(key=lambda r: r.t)
-        return out
+    @staticmethod
+    def _trim_indices(frame: BenchmarkFrame, keep: int) -> np.ndarray:
+        """Indices of the newest ``keep`` rows per (type x machine)
+        chain, in global chronological order."""
+        n = len(frame)
+        key = (frame.type_code.astype(np.int64)
+               * max(len(frame.machines), 1) + frame.machine_code)
+        order = np.lexsort((np.arange(n), frame.t, key))
+        key_sorted = key[order]
+        boundary = np.ones(n, bool)
+        boundary[1:] = key_sorted[1:] != key_sorted[:-1]
+        starts = np.where(boundary)[0]
+        lengths = np.diff(np.append(starts, n))
+        length_per_row = np.repeat(lengths, lengths)
+        pos = np.arange(n) - np.maximum.accumulate(
+            np.where(boundary, np.arange(n), 0))
+        kept = order[pos >= length_per_row - keep]
+        return kept[np.lexsort((kept, frame.t[kept]))]
 
     def excluded_nodes(self) -> List[str]:
         return [n for n, s in self._strikes.items()

@@ -1,0 +1,5 @@
+"""Serving layer: batched, compile-cached fingerprint scoring."""
+
+from repro.serving.engine import FingerprintEngine, ScoreResult
+
+__all__ = ["FingerprintEngine", "ScoreResult"]

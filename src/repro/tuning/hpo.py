@@ -5,7 +5,8 @@ The paper samples 100 configurations with Ray Tune + Optuna over:
 root-weight, CBFL gamma/beta, learning rate, weight decay. This module
 implements a seeded random search over the same space (quasi-random
 sampling; the TPE surrogate is unnecessary at this budget) and returns
-the best model by validation loss.
+the best model under the trainer's checkpoint-selection rank
+(validation outlier F1, total loss as tie-break).
 """
 
 from __future__ import annotations
@@ -36,7 +37,14 @@ SPACE = {
 class Trial:
     params: Dict
     val_loss: float
+    val_f1: float = 0.0
     result: Optional[TrainResult] = None
+
+    @property
+    def score(self) -> Tuple[float, float]:
+        """Rank key matching train_perona's checkpoint selection:
+        max val outlier F1, then min val loss as tie-break."""
+        return (self.val_f1, -self.val_loss)
 
 
 def sample_config(rng: np.random.Generator) -> Dict:
@@ -80,16 +88,19 @@ def search(base_cfg: PeronaConfig, train_batch: PeronaBatch,
         res = train_perona(model, train_batch, val_batch, epochs=epochs,
                            lr=hp["lr"], weight_decay=hp["weight_decay"],
                            seed=seed + t)
-        val_losses = [h["val_loss"] for h in res.history
-                      if "val_loss" in h]
-        vl = float(min(val_losses)) if val_losses else float("inf")
-        trial = Trial(params=hp, val_loss=vl, result=res)
+        # score the checkpoint train_perona actually kept: the F1-best
+        # epoch (loss as tie-break), mirroring its selection rule
+        sel = [(h.get("val_f1_outlier", 0.0), -h["val_loss"])
+               for h in res.history if "val_loss" in h]
+        f1, neg_vl = max(sel) if sel else (0.0, -float("inf"))
+        trial = Trial(params=hp, val_loss=-neg_vl, val_f1=f1, result=res)
         trials.append(trial)
-        if best is None or vl < best.val_loss:
+        if best is None or trial.score > best.score:
             best = trial
         if verbose:
-            print(f"[hpo {t + 1}/{n_trials}] val={vl:.4f} "
-                  f"best={best.val_loss:.4f} {hp}")
+            print(f"[hpo {t + 1}/{n_trials}] f1={f1:.4f} "
+                  f"val={trial.val_loss:.4f} best_f1={best.val_f1:.4f} "
+                  f"{hp}")
         # free non-best results to bound memory
         if trial is not best:
             trial.result = None

@@ -1,0 +1,105 @@
+"""FingerprintEngine: jit'd scoring parity + compile-amortization."""
+
+import jax
+import numpy as np
+import pytest
+
+from repro.core.graph_data import build_graphs
+from repro.core.model import PeronaConfig, PeronaModel
+from repro.core.preprocess import Preprocessor
+from repro.core.trainer import batch_to_jnp
+from repro.fingerprint.runner import SuiteRunner
+from repro.runtime.watchdog import PeronaWatchdog
+from repro.serving.engine import FingerprintEngine, bucket_size
+
+
+@pytest.fixture(scope="module")
+def small_setup():
+    runner = SuiteRunner(seed=7)
+    machines = {"m0": "e2-medium", "m1": "n2-standard-4"}
+    frame = runner.run_frame(machines, runs_per_type=10,
+                             stress_fraction=0.2)
+    pre = Preprocessor().fit(frame)
+    batch = build_graphs(frame, pre)
+    cfg = PeronaConfig(feature_dim=pre.feature_dim,
+                       edge_dim=batch.edge.shape[-1])
+    model = PeronaModel(cfg)
+    params = model.init(jax.random.PRNGKey(0))  # untrained: scoring only
+    return runner, machines, frame, pre, model, params
+
+
+def test_bucket_size():
+    assert bucket_size(1) == 64
+    assert bucket_size(64) == 64
+    assert bucket_size(65) == 128
+    assert bucket_size(1800) == 2048
+
+
+def test_engine_matches_reference_scoring(small_setup):
+    _, _, frame, pre, model, params = small_setup
+    engine = FingerprintEngine(model, params, pre)
+    res = engine.score(frame)
+
+    batch = build_graphs(frame, pre)
+    out = model.forward(params, batch_to_jnp(batch), train=False)
+    ref_prob = np.asarray(jax.nn.sigmoid(out["anom_logit"]))
+    ref_codes = np.asarray(out["codes"])
+    assert res.anomaly_prob.shape == ref_prob.shape
+    np.testing.assert_allclose(res.anomaly_prob, ref_prob, atol=2e-4)
+    np.testing.assert_allclose(res.codes, ref_codes, atol=2e-3)
+
+
+def test_engine_accepts_records(small_setup):
+    _, _, frame, pre, model, params = small_setup
+    engine = FingerprintEngine(model, params, pre)
+    a = engine.score(frame)
+    b = engine.score(frame.to_records())
+    np.testing.assert_allclose(a.anomaly_prob, b.anomaly_prob, atol=1e-6)
+
+
+def test_engine_compiles_once_per_bucket(small_setup):
+    runner, machines, frame, pre, model, params = small_setup
+    engine = FingerprintEngine(model, params, pre)
+    assert engine.trace_count == 0
+    r1 = engine.score(frame)  # 120 rows -> bucket 128
+    assert engine.trace_count == 1
+    engine.score(frame)
+    assert engine.trace_count == 1
+    # a different round with the same bucket: no new trace
+    other = runner.run_frame(machines, runs_per_type=9)  # 108 rows
+    assert bucket_size(len(other)) == r1.n_padded
+    engine.score(other)
+    assert engine.trace_count == 1
+    # crossing a bucket boundary traces exactly once more
+    bigger = runner.run_frame(machines, runs_per_type=20)  # 240 rows
+    engine.score(bigger)
+    assert engine.trace_count == 2
+
+
+def test_watchdog_rounds_amortize_one_compile(small_setup):
+    """Repeated watchdog rounds with a bounded history must reuse one
+    compiled scoring call (the regression the engine exists for)."""
+    runner, machines, frame, pre, model, params = small_setup
+    wd = PeronaWatchdog(model, params, pre, history_per_chain=10)
+    wd.history = frame
+    for _ in range(4):
+        # history is at the per-chain cap -> constant size -> one bucket
+        recs = runner.run_frame({"m0": "e2-medium"}, runs_per_type=2)
+        decisions = wd.observe(recs)
+        assert [d.node for d in decisions] == ["m0"]
+    assert wd.engine.trace_count == 1
+
+
+def test_watchdog_history_trim(small_setup):
+    runner, machines, frame, pre, model, params = small_setup
+    wd = PeronaWatchdog(model, params, pre, history_per_chain=4)
+    wd.history = frame
+    wd.observe(runner.run_frame(machines, runs_per_type=1))
+    hist = wd.history_frame
+    # every (type, machine) chain trimmed to <= 4 newest runs
+    key = (hist.type_code.astype(np.int64) * len(hist.machines)
+           + hist.machine_code)
+    _, counts = np.unique(key, return_counts=True)
+    assert counts.max() <= 4
+    # chronological order maintained
+    assert np.all(np.diff(hist.t) >= 0)

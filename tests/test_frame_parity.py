@@ -1,0 +1,309 @@
+"""Columnar-pipeline parity: the BenchmarkFrame-based acquisition,
+preprocessing and graph construction must produce *identical* features,
+masks and edges to the per-record path of the seed implementation.
+
+The record-loop reference implementations below are verbatim ports of
+the seed's ``Preprocessor.fit/transform`` and ``build_graphs`` (dict +
+Python-loop algorithms); the shipped code is columnar, and these tests
+pin it to the naive semantics.
+"""
+
+import numpy as np
+import pytest
+
+from repro.core.graph_data import (P_PREDECESSORS, build_graphs,
+                                   chronological_split)
+from repro.core.preprocess import Preprocessor, unify
+from repro.fingerprint.frame import BenchmarkFrame, concat_frames
+from repro.fingerprint.records import BenchmarkExecution
+from repro.fingerprint.runner import SuiteRunner, paper_acquisition_frame
+
+
+# --------------------------------------------------------------------------
+# Seed (record-loop) reference implementations
+# --------------------------------------------------------------------------
+
+def reference_fit(pre, records):
+    """The seed's Preprocessor.fit: dict-of-lists over records."""
+    values = {}
+    for r in records:
+        for name, (v, unit) in r.metrics.items():
+            values.setdefault(name, []).append(unify(v, unit))
+    raw_feature_count = len(values)
+
+    selected = []
+    for name in sorted(values):
+        arr = np.asarray(values[name], np.float64)
+        if len(np.unique(np.round(arr, 12))) < 2:
+            continue
+        std = float(np.std(arr))
+        if pre.std_mode == "cv":
+            denom = max(abs(float(np.mean(arr))), 1e-12)
+            disp = std / denom
+        else:
+            disp = std
+        if disp >= pre.std_threshold:
+            selected.append(name)
+
+    F = len(selected)
+    maximize = np.zeros((F,), bool)
+    lo = np.zeros((F,))
+    hi = np.ones((F,))
+    for i, name in enumerate(selected):
+        arr = np.asarray(values[name], np.float64)
+        mx, mn, med = float(arr.max()), float(arr.min()), float(
+            np.median(arr))
+        maximize[i] = (mx - med) <= (med - mn)
+        lo[i] = mn
+        hi[i] = mx if mx > mn else mn + 1.0
+
+    benchmark_types = sorted({r.benchmark_type for r in records})
+    edge_names = sorted({k for r in records for k in r.node_metrics})
+    em = np.asarray([[r.node_metrics.get(k, 0.0) for k in edge_names]
+                     for r in records])
+    edge_lo = em.min(0)
+    edge_hi = np.where(em.max(0) > em.min(0), em.max(0), em.min(0) + 1.0)
+    return {
+        "raw_feature_count": raw_feature_count,
+        "feature_names": selected, "maximize": maximize, "lo": lo,
+        "hi": hi, "benchmark_types": benchmark_types,
+        "edge_names": edge_names, "edge_lo": edge_lo, "edge_hi": edge_hi,
+    }
+
+
+def reference_transform(pre, records):
+    """The seed's Preprocessor.transform (uses the fitted pre's stats)."""
+    F = len(pre.feature_names)
+    idx = {n: i for i, n in enumerate(pre.feature_names)}
+    raw = np.zeros((len(records), F))
+    present = np.zeros((len(records), F), bool)
+    for j, r in enumerate(records):
+        for name, (v, unit) in r.metrics.items():
+            i = idx.get(name)
+            if i is not None:
+                raw[j, i] = unify(v, unit)
+                present[j, i] = True
+    norm = (raw - pre.lo) / (pre.hi - pre.lo)
+    norm = np.clip(norm, 0.0, 1.0)
+    norm = np.where(pre.maximize, norm, 1.0 - norm)
+    norm = np.where(present, norm, pre.fill_mean)
+    onehot = np.zeros((len(records), len(pre.benchmark_types)))
+    tindex = {t: i for i, t in enumerate(pre.benchmark_types)}
+    for j, r in enumerate(records):
+        onehot[j, tindex[r.benchmark_type]] = 1.0
+    return np.concatenate([norm, onehot], axis=1), present
+
+
+def reference_build_graphs(records, pre):
+    """The seed's build_graphs: per-chain Python loops."""
+    x = pre.transform(records)
+    em = np.asarray([[r.node_metrics.get(k, 0.0) for k in pre.edge_names]
+                     for r in records])
+    edge_feats = np.clip(
+        (em - pre.edge_lo) / (pre.edge_hi - pre.edge_lo), 0.0, 1.0)
+    A = edge_feats.shape[1] + 4
+    N = len(records)
+
+    def time_enc(dt, t_src):
+        hod = (t_src / 3600.0) % 24.0
+        return [
+            float(np.log1p(dt) / 12.0),
+            float(min(dt / 3600.0, 1.0)),
+            0.5 + 0.5 * float(np.sin(2 * np.pi * hod / 24)),
+            0.5 + 0.5 * float(np.cos(2 * np.pi * hod / 24)),
+        ]
+
+    chains = {}
+    for i, r in enumerate(records):
+        chains.setdefault((r.benchmark_type, r.machine), []).append(i)
+    nbr = -np.ones((N, P_PREDECESSORS), np.int32)
+    edge = np.zeros((N, P_PREDECESSORS, A), np.float32)
+    chain_id = np.zeros((N,), np.int32)
+    for cid, (key, idxs) in enumerate(sorted(chains.items())):
+        idxs = sorted(idxs, key=lambda i: records[i].t)
+        for pos, i in enumerate(idxs):
+            chain_id[i] = cid
+            preds = idxs[max(0, pos - P_PREDECESSORS):pos]
+            for p, j in enumerate(reversed(preds)):
+                nbr[i, p] = j
+                dt = max(records[i].t - records[j].t, 0.0)
+                edge[i, p] = np.concatenate([
+                    edge_feats[j],
+                    np.asarray(time_enc(dt, records[j].t))])
+    return nbr, edge, chain_id
+
+
+def reference_split(records, fractions=(0.6, 0.2, 0.2)):
+    chains = {}
+    for i, r in enumerate(records):
+        chains.setdefault((r.benchmark_type, r.machine), []).append(i)
+    train, val, test = [], [], []
+    for idxs in chains.values():
+        idxs = sorted(idxs, key=lambda i: records[i].t)
+        n = len(idxs)
+        a = int(n * fractions[0])
+        b = int(n * (fractions[0] + fractions[1]))
+        train += idxs[:a]
+        val += idxs[a:b]
+        test += idxs[b:]
+    pick = lambda ids: [records[i] for i in sorted(ids)]
+    return pick(train), pick(val), pick(test)
+
+
+# --------------------------------------------------------------------------
+# Fixtures
+# --------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def acq():
+    frame = paper_acquisition_frame(seed=0)
+    return frame, frame.to_records()
+
+
+# --------------------------------------------------------------------------
+# Round trip + acquisition
+# --------------------------------------------------------------------------
+
+def test_frame_record_round_trip_lossless(acq):
+    frame, records = acq
+    back = BenchmarkFrame.from_records(records)
+    again = back.to_records()
+    assert again == records  # dataclass equality: exact values + units
+
+
+def test_run_is_frame_conversion(acq):
+    """The record-list API is a view of the columnar acquisition."""
+    machines = {f"node-{i}": "e2-medium" for i in range(1, 4)}
+    recs = SuiteRunner(seed=0).run(machines, runs_per_type=100,
+                                   stress_fraction=0.2)
+    assert recs == acq[1]
+
+
+def test_columnar_acquisition_statistics_match_reference():
+    """run_frame and the seed triple loop draw from the same
+    distributions (different stream order)."""
+    machines = {"a": "e2-medium", "b": "c2-standard-4"}
+    frame = SuiteRunner(seed=1).run_frame(machines, runs_per_type=60,
+                                          stress_fraction=0.25)
+    ref = SuiteRunner(seed=1).run_reference(machines, runs_per_type=60,
+                                            stress_fraction=0.25)
+    assert len(frame) == len(ref) == 2 * 6 * 60
+    assert abs(frame.stressed.mean()
+               - np.mean([r.stressed for r in ref])) < 0.1
+    recs = frame.to_records()
+    for name in ("cpu.events_per_second", "mem.throughput",
+                 "fio.read.iops", "ioping.lat_avg", "qperf.tcp_bw",
+                 "iperf3.sent_bps"):
+        a = np.asarray([r.metrics[name][0] for r in recs
+                        if name in r.metrics])
+        b = np.asarray([r.metrics[name][0] for r in ref
+                        if name in r.metrics])
+        assert a.shape == b.shape
+        assert abs(np.log(a.mean() / b.mean())) < 0.15, name
+
+
+def test_network_benchmarks_serialized(acq):
+    frame, _ = acq
+    net = np.isin(frame.type_code,
+                  [frame.benchmark_types.index(b)
+                   for b in ("qperf", "iperf3")])
+    ts = np.sort(frame.t[net])
+    assert len(np.unique(ts)) == len(ts)  # one slot per network run
+
+
+# --------------------------------------------------------------------------
+# Preprocess / graph-build parity (identical arrays)
+# --------------------------------------------------------------------------
+
+def test_fit_parity(acq):
+    frame, records = acq
+    pre = Preprocessor().fit(frame)
+    ref = reference_fit(Preprocessor(), records)
+    assert pre.raw_feature_count == ref["raw_feature_count"]
+    assert pre.feature_names == ref["feature_names"]
+    assert np.array_equal(pre.maximize, ref["maximize"])
+    assert np.array_equal(pre.lo, ref["lo"])
+    assert np.array_equal(pre.hi, ref["hi"])
+    assert pre.benchmark_types == ref["benchmark_types"]
+    assert pre.edge_names == ref["edge_names"]
+    assert np.array_equal(pre.edge_lo, ref["edge_lo"])
+    assert np.array_equal(pre.edge_hi, ref["edge_hi"])
+
+
+def test_transform_parity(acq):
+    frame, records = acq
+    pre = Preprocessor().fit(frame)
+    x_frame = pre.transform(frame)
+    x_ref, present_ref = reference_transform(pre, records)
+    assert np.array_equal(x_frame, x_ref)
+    _, present = pre.raw_features(frame)
+    assert np.array_equal(present, present_ref)
+
+
+def test_build_graphs_parity(acq):
+    frame, records = acq
+    pre = Preprocessor().fit(frame)
+    batch = build_graphs(frame, pre)
+    nbr_ref, edge_ref, chain_ref = reference_build_graphs(records, pre)
+    assert np.array_equal(batch.nbr, nbr_ref)
+    assert np.array_equal(batch.nbr_mask, nbr_ref >= 0)
+    assert np.array_equal(batch.chain, chain_ref)
+    assert np.array_equal(batch.edge, edge_ref)
+    assert batch.machine == [r.machine for r in records]
+
+
+def test_build_graphs_records_and_frame_agree(acq):
+    frame, records = acq
+    pre = Preprocessor().fit(records)
+    a = build_graphs(records, pre)
+    b = build_graphs(frame, pre)
+    assert np.array_equal(a.x, b.x)
+    assert np.array_equal(a.nbr, b.nbr)
+    assert np.array_equal(a.edge, b.edge)
+    assert np.array_equal(a.norm_gt, b.norm_gt)
+
+
+def test_chronological_split_parity(acq):
+    frame, records = acq
+    ours = chronological_split(records)
+    ref = reference_split(records)
+    for a, b in zip(ours, ref):
+        assert a == b
+    # frame in -> frame out, same rows
+    frames = chronological_split(frame)
+    for fr, b in zip(frames, ref):
+        assert isinstance(fr, BenchmarkFrame)
+        assert fr.to_records() == b
+
+
+def test_mixed_unit_columns_merge():
+    """One metric reported in two units lands in one unified feature."""
+
+    def rec(v, unit, t):
+        return BenchmarkExecution(
+            benchmark_type="sysbench-cpu", machine="n0",
+            machine_type="e2-medium", t=t,
+            metrics={"m.lat": (v, unit), "m.x": (t, "count")},
+            node_metrics={"node.cpu_util": 0.4}, stressed=False)
+
+    records = [rec(1500.0 + 100 * i, "ms", float(i)) for i in range(4)]
+    records += [rec(1.5 + 0.2 * i, "s", 4.0 + i) for i in range(4)]
+    frame = BenchmarkFrame.from_records(records)
+    assert frame.n_metrics == 3  # (m.lat, ms), (m.lat, s), (m.x, count)
+    pre = Preprocessor(std_threshold=0.0).fit(frame)
+    assert "m.lat" in pre.feature_names
+    x = pre.transform(frame)
+    x_ref, _ = reference_transform(pre, records)
+    assert np.array_equal(x, x_ref)
+    # and the frame round-trips the original units
+    assert frame.to_records() == records
+
+
+def test_concat_frames_unions_columns():
+    r1 = SuiteRunner(seed=5).run_frame({"a": "e2-medium"}, 3)
+    r2 = SuiteRunner(seed=6).run_frame({"b": "n2-standard-4"}, 2)
+    cat = concat_frames([r1, r2])
+    assert len(cat) == len(r1) + len(r2)
+    assert set(cat.machines) == {"a", "b"}
+    recs = cat.to_records()
+    assert recs == r1.to_records() + r2.to_records()

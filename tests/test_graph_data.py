@@ -1,7 +1,7 @@
 """Benchmark-execution graph construction invariants."""
 
 import numpy as np
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.core.graph_data import P_PREDECESSORS, build_graphs
 

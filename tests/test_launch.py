@@ -89,6 +89,7 @@ def test_multi_device_lower_compile_subprocess():
         os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=16"
         import jax
         from repro.configs import get_config
+        from repro.launch import roofline as rl
         from repro.launch.mesh import make_debug_mesh
         from repro.launch.steps import lowerable
         from repro.models.config import ShapeConfig
@@ -102,7 +103,7 @@ def test_multi_device_lower_compile_subprocess():
         with mesh:
             compiled = jax.jit(fn, in_shardings=shardings).lower(
                 *args).compile()
-        ca = compiled.cost_analysis()
+        ca = rl.cost_analysis_dict(compiled)
         assert ca.get("flops", 0) > 0
         print("OK", int(ca["flops"]))
     """)

@@ -6,7 +6,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.models import attention as attn
 from repro.models import nn
@@ -120,7 +120,8 @@ def test_elastic_reshard_roundtrip():
 
 def test_hpo_search_space_and_improvement(fitted):
     """A 4-trial random search runs end to end and returns the best
-    validation loss among trials."""
+    trial under the checkpoint-selection rank (val outlier F1, loss
+    tie-break)."""
     from repro.core.model import PeronaConfig
     from repro.tuning import hpo
 
@@ -129,7 +130,7 @@ def test_hpo_search_space_and_improvement(fitted):
     best, trials = hpo.search(cfg, fitted["train"], fitted["val"],
                               n_trials=4, epochs=15, seed=0)
     assert len(trials) == 4
-    assert best.val_loss == min(t.val_loss for t in trials)
+    assert best.score == max(t.score for t in trials)
     assert best.result is not None
     for t in trials:
         assert 1 <= t.params["heads"] <= 8
