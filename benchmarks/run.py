@@ -3,14 +3,19 @@
 Prints ``name,us_per_call,derived`` CSV. Modules:
   bench_fingerprint — paper §IV-C quality table
   bench_tuning      — paper §IV-D Fig. 5 (CherryPick/Arrow +- Perona)
+                      + HPO engine (sequential vs vmapped) wall-clock
   bench_workflows   — paper §IV-E Table III (Lotaru) + Tarema groups
   bench_kernels     — kernel-path microbenchmarks
   bench_roofline    — dry-run roofline summary (deliverable g)
+
+The tuning module's rows are also written to ``BENCH_tuning.json`` so
+the training/HPO perf trajectory is tracked across PRs.
 
 Usage: PYTHONPATH=src python -m benchmarks.run [--only <module-substr>]
 """
 
 import argparse
+import json
 import sys
 import time
 import traceback
@@ -21,15 +26,21 @@ def main() -> None:
     ap.add_argument("--only", default="")
     ap.add_argument("--quick", action="store_true",
                     help="reduced workload counts for smoke usage")
+    ap.add_argument("--json-out", default="BENCH_tuning.json",
+                    help="where to write the tuning rows as JSON")
     args = ap.parse_args()
 
     from benchmarks import (bench_fingerprint, bench_kernels,
                             bench_roofline, bench_tuning, bench_workflows)
 
+    n_workloads = 6 if args.quick else 18
+    hpo_trials = 8 if args.quick else 32
+    hpo_epochs = 8 if args.quick else 25
     modules = [
         ("fingerprint", lambda rows: bench_fingerprint.run(rows)),
         ("tuning", lambda rows: bench_tuning.run(
-            rows, n_workloads=(6 if args.quick else 18))),
+            rows, n_workloads=n_workloads, hpo_trials=hpo_trials,
+            hpo_epochs=hpo_epochs)),
         ("workflows", lambda rows: bench_workflows.run(rows)),
         ("kernels", lambda rows: bench_kernels.run(rows)),
         ("roofline", lambda rows: bench_roofline.run(rows)),
@@ -39,6 +50,7 @@ def main() -> None:
     for name, fn in modules:
         if args.only and args.only not in name:
             continue
+        start = len(rows)
         t0 = time.time()
         try:
             fn(rows)
@@ -46,6 +58,22 @@ def main() -> None:
         except Exception as e:  # noqa: BLE001
             traceback.print_exc()
             rows.append((f"{name}.ERROR", "", repr(e)))
+        if name == "tuning" and args.json_out:
+            payload = {
+                "module": name,
+                "unix_time": time.time(),
+                # record the run parameters so quick smoke numbers are
+                # never mistaken for the tracked full-run trajectory
+                "quick": args.quick,
+                "hpo_trials": hpo_trials,
+                "hpo_epochs": hpo_epochs,
+                "n_workloads": n_workloads,
+                "rows": [{"name": n, "us_per_call": u, "derived": d}
+                         for n, u, d in rows[start:]],
+            }
+            with open(args.json_out, "w") as f:
+                json.dump(payload, f, indent=2)
+                f.write("\n")
     for r in rows:
         print(",".join(str(x) for x in r))
 

@@ -1,5 +1,6 @@
 """Shared low-level utilities: pytree helpers, registries, logging."""
 
+from repro.common.bucketing import next_pow2
 from repro.common.tree import (
     tree_zeros_like,
     tree_add,
@@ -11,6 +12,7 @@ from repro.common.tree import (
 from repro.common.registry import Registry
 
 __all__ = [
+    "next_pow2",
     "tree_zeros_like",
     "tree_add",
     "tree_scale",

@@ -1,0 +1,14 @@
+"""Shape-bucketing primitive shared by every pow2-padding site.
+
+One policy, three consumers: ``serving.FingerprintEngine`` (row
+buckets), ``tuning.hpo`` (vmapped trial-axis buckets) and
+``kernels/edge_softmax`` (node-axis blocks, additionally capped).
+"""
+
+from __future__ import annotations
+
+
+def next_pow2(n: int, floor: int = 1) -> int:
+    """Smallest power of two >= max(n, floor). ``floor`` must itself be
+    a power of two."""
+    return max(floor, 1 << max(n - 1, 0).bit_length())

@@ -10,14 +10,14 @@
          type; anomalous codes must rank below the lowest normal code
 
 All losses are masked-mean over valid nodes and combined additively.
+Scalar hyperparameters (CBFL gamma/beta) may be python floats or traced
+jnp scalars — the vmapped HPO engine passes per-trial values.
 """
 
 from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
-
-NEG = -1e30
 
 
 def mse_loss(recon, x, valid):
@@ -28,6 +28,9 @@ def mse_loss(recon, x, valid):
 def class_balanced_focal_loss(logit, label, valid, *, gamma: float = 2.0,
                               beta: float = 0.999):
     """Binary CBFL. logit (N,), label (N,) in {0,1}."""
+    # cast first so python-float and traced-scalar beta give identical
+    # f32 arithmetic (1 - beta happens in f32 either way)
+    beta = jnp.float32(beta)
     label = label.astype(jnp.float32)
     n_pos = jnp.sum(label * valid)
     n_neg = jnp.sum((1 - label) * valid)

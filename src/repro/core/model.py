@@ -108,28 +108,15 @@ def _transformer_conv(p, cfg, codes, nbr, mask, edge):
     hd = K // hN
     N, P = mask.shape
     if cfg.gnn_impl == "pallas":
-        from repro.kernels.edge_softmax import ops as es_ops
-
-        qh = q.reshape(N, hN, hd).transpose(1, 0, 2).reshape(hN * N, hd)
-        kh = k.reshape(N, P, hN, hd).transpose(2, 0, 1, 3).reshape(
-            hN * N, P, hd)
-        vh = v.reshape(N, P, hN, hd).transpose(2, 0, 1, 3).reshape(
-            hN * N, P, hd)
-        mh = jnp.tile(mask, (hN, 1))
-        out, _ = es_ops.edge_softmax_aggregate(qh, kh, vh, mh)
-        out = out.reshape(hN, N, hd).transpose(1, 0, 2).reshape(N, K)
-        return out
-    from repro.kernels.edge_softmax import ref as es_ref
-
-    qh = q.reshape(N, hN, hd)
-    kh = k.reshape(N, P, hN, hd)
-    vh = v.reshape(N, P, hN, hd)
-    outs = []
-    for h in range(hN):
-        o, _ = es_ref.edge_softmax_aggregate(qh[:, h], kh[:, :, h],
-                                             vh[:, :, h], mask)
-        outs.append(o)
-    return jnp.concatenate(outs, axis=-1)
+        from repro.kernels.edge_softmax import ops as impl
+    else:
+        from repro.kernels.edge_softmax import ref as impl
+    # both impls take the (N, H, hd) head layout directly: no per-head
+    # loop, no (hN*N, P, hd) flattening
+    out, _ = impl.edge_softmax_aggregate(
+        q.reshape(N, hN, hd), k.reshape(N, P, hN, hd),
+        v.reshape(N, P, hN, hd), mask)
+    return out.reshape(N, K)
 
 
 def _tag_conv(p, cfg, codes, nbr, mask):
@@ -145,12 +132,18 @@ def _tag_conv(p, cfg, codes, nbr, mask):
 
 
 def aggregate(p, cfg: PeronaConfig, codes, nbr, mask, edge, *, rng=None,
-              train: bool = False):
+              train: bool = False, edge_dropout=None):
     """The paper's agg: edge dropout -> mean(TransformerConv, TAGConv)
-    -> SELU -> alpha dropout -> linear (+root skip)."""
-    if train and rng is not None and cfg.edge_dropout > 0:
+    -> SELU -> alpha dropout -> linear (+root skip).
+
+    ``edge_dropout`` optionally overrides ``cfg.edge_dropout`` with a
+    traced scalar (vmapped HPO); when given, dropout is always applied.
+    """
+    ed = cfg.edge_dropout if edge_dropout is None else edge_dropout
+    if train and rng is not None and (edge_dropout is not None
+                                      or cfg.edge_dropout > 0):
         rng, sub = jax.random.split(rng)
-        keep = jax.random.bernoulli(sub, 1.0 - cfg.edge_dropout, mask.shape)
+        keep = jax.random.bernoulli(sub, 1.0 - ed, mask.shape)
         mask = mask & keep
     t_out = _transformer_conv(p, cfg, codes, nbr, mask, edge)
     g_out = _tag_conv(p, cfg, codes, nbr, mask)
@@ -182,29 +175,45 @@ class PeronaModel:
     def init(self, key):
         return perona_init(self.cfg, key)
 
-    def forward(self, params, batch, *, rng=None, train: bool = False):
+    def forward(self, params, batch, *, rng=None, train: bool = False,
+                hypers: Optional[Dict] = None):
         """batch: dict with x, nbr, nbr_mask, edge (jnp arrays).
+
+        ``hypers`` optionally carries *traced* scalar hyperparameters
+        (``feature_dropout``, ``edge_dropout``) overriding the static
+        config fields — this is what lets a vmapped HPO bucket train
+        many trials in one compiled program. Dropouts present in
+        ``hypers`` are always applied (rates are assumed positive), so
+        the rng-split sequence matches the static path for positive
+        static rates.
 
         Returns dict(codes, recon, agg, anom_logit, type_logits).
         """
+        hypers = hypers or {}
         x = batch["x"]
-        if train and rng is not None and self.cfg.feature_dropout > 0:
+        fd = hypers.get("feature_dropout", self.cfg.feature_dropout)
+        if train and rng is not None and (
+                "feature_dropout" in hypers or self.cfg.feature_dropout > 0):
             rng, sub = jax.random.split(rng)
-            keep = jax.random.bernoulli(
-                sub, 1.0 - self.cfg.feature_dropout, x.shape)
-            x = x * keep / (1.0 - self.cfg.feature_dropout)
+            keep = jax.random.bernoulli(sub, 1.0 - fd, x.shape)
+            x = x * keep / (1.0 - fd)
         codes = _mlp(params["enc"], x)
         recon = _mlp(params["dec"], codes, final="sigmoid")
         agg = aggregate(params, self.cfg, codes, batch["nbr"],
                         batch["nbr_mask"], batch["edge"], rng=rng,
-                        train=train)
+                        train=train,
+                        edge_dropout=hypers.get("edge_dropout"))
         anom_logit = _mlp(params["f1"], agg - codes)[:, 0]
         type_logits = nn.linear(params["cls"], codes)
         return {"codes": codes, "recon": recon, "agg": agg,
                 "anom_logit": anom_logit, "type_logits": type_logits}
 
-    def loss(self, params, batch, rng):
-        out = self.forward(params, batch, rng=rng, train=True)
+    def loss(self, params, batch, rng, hypers: Optional[Dict] = None):
+        """``hypers`` (optional) threads traced scalar hyperparameters
+        (dropouts, CBFL gamma/beta) through the loss — see forward()."""
+        hypers = hypers or {}
+        out = self.forward(params, batch, rng=rng, train=True,
+                           hypers=hypers)
         cfg = self.cfg
         valid = batch.get("valid")
         if valid is None:
@@ -213,7 +222,8 @@ class PeronaModel:
         mse = L.mse_loss(out["recon"], batch["x"], valid)
         cbfl = L.class_balanced_focal_loss(
             out["anom_logit"], batch["anomaly"], valid,
-            gamma=cfg.cbfl_gamma, beta=cfg.cbfl_beta)
+            gamma=hypers.get("cbfl_gamma", cfg.cbfl_gamma),
+            beta=hypers.get("cbfl_beta", cfg.cbfl_beta))
         cel = L.cross_entropy_loss(out["type_logits"], batch["type_id"],
                                    valid)
         tml = L.triplet_margin_loss(out["codes"], batch["type_id"], valid,

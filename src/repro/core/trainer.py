@@ -2,8 +2,25 @@
 
 The paper trains with batch size 16 over the per-(type x instance)
 benchmark graphs; the §IV-C acquisition yields 18 such chains, so one
-full batch covers the dataset — we train full-batch with jit'd epochs
-and early stopping on the validation total loss.
+full batch covers the dataset — we train full-batch.
+
+``train_perona`` is device-resident: the whole epoch loop is a
+``jax.lax.scan`` inside ONE jit-compiled call — on-device validation
+loss, on-device outlier F1 (jnp confusion counts), on-device
+best-checkpoint selection (tree_map + jnp.where on the (f1, -loss)
+rank) and early stopping as a masked "stopped" flag in the carry. No
+per-epoch host transfers happen; the history arrays come back in a
+single device->host fetch after the scan. Scalar hyperparameters
+(dropouts, CBFL gamma/beta, lr, weight decay) are threaded through the
+model/optimizer as *traced* values, so the same compiled program serves
+every trial of an HPO bucket (see ``tuning/hpo.py``), and compiled
+trainers are cached across calls per (model config, epochs, patience,
+shapes).
+
+The legacy per-epoch host loop is preserved as
+``train_perona_reference`` and pinned by a parity test
+(``tests/test_trainer_scan.py``), mirroring PR 1's ``run_reference``
+pattern.
 
 Checkpoint selection uses the validation *outlier F1* (total loss as
 tie-break): the five-objective total is a noisy proxy for the anomaly
@@ -15,7 +32,8 @@ runs, F1 is constantly 0 and selection falls back to the loss.
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, Optional, Tuple
+import functools
+from typing import Dict, Optional
 
 import jax
 import jax.numpy as jnp
@@ -38,11 +56,170 @@ def batch_to_jnp(batch: PeronaBatch) -> Dict[str, jnp.ndarray]:
     }
 
 
+class TraceCount:
+    """Mutable jit-trace counter; tick() runs at trace time only (the
+    same pattern as ``serving.FingerprintEngine.trace_count``)."""
+
+    def __init__(self):
+        self.count = 0
+
+    def tick(self):
+        self.count += 1
+
+
+#: Ticked once per tracing of the scanned trainer (shared by the single
+#: trainer and the vmapped HPO buckets).
+TRAINER_TRACES = TraceCount()
+
+
 @dataclasses.dataclass
 class TrainResult:
     params: dict
     history: list
     best_epoch: int
+    stats: Optional[Dict] = None  # device_dispatches / traced (scanned)
+
+
+def _tree_where(pred, a, b):
+    """Scalar-predicate select over matching pytrees."""
+    return jax.tree_util.tree_map(lambda x, y: jnp.where(pred, x, y), a, b)
+
+
+def _f1_outlier(logits, y):
+    """On-device outlier F1 from jnp confusion counts.
+
+    Matches the host reference: sigmoid(x) >= 0.5 <=> logit >= 0."""
+    pred = logits >= 0.0
+    pos = y == 1
+    tp = jnp.sum(pred & pos).astype(jnp.float32)
+    fp = jnp.sum(pred & ~pos).astype(jnp.float32)
+    fn = jnp.sum(~pred & pos).astype(jnp.float32)
+    prec = tp / jnp.maximum(tp + fp, 1.0)
+    rec = tp / jnp.maximum(tp + fn, 1.0)
+    return 2.0 * prec * rec / jnp.maximum(prec + rec, 1e-9)
+
+
+def model_hypers(cfg: PeronaConfig, lr: float, weight_decay: float) -> Dict:
+    """Scalar hypers as traced f32 leaves. Dropout keys are included
+    only when the static rate is positive, so the rng-split sequence
+    matches the static-config code path exactly."""
+    h = {
+        "cbfl_gamma": jnp.float32(cfg.cbfl_gamma),
+        "cbfl_beta": jnp.float32(cfg.cbfl_beta),
+        "lr": jnp.float32(lr),
+        "weight_decay": jnp.float32(weight_decay),
+    }
+    if cfg.feature_dropout > 0:
+        h["feature_dropout"] = jnp.float32(cfg.feature_dropout)
+    if cfg.edge_dropout > 0:
+        h["edge_dropout"] = jnp.float32(cfg.edge_dropout)
+    return h
+
+
+def canonical_model(model: PeronaModel) -> PeronaModel:
+    """Model with the traced scalar hypers pinned to canonical values.
+
+    The compiled trainer receives dropouts / CBFL gamma / beta as traced
+    inputs, so its program depends only on the *positivity* of the
+    dropout rates (a static rng-split branch), not their values. Keying
+    the compile cache on this canonical config lets trials that differ
+    only in scalar hypers share one executable.
+    """
+    cfg = model.cfg
+    return PeronaModel(dataclasses.replace(
+        cfg,
+        feature_dropout=0.1 if cfg.feature_dropout > 0 else 0.0,
+        edge_dropout=0.1 if cfg.edge_dropout > 0 else 0.0,
+        cbfl_gamma=2.0, cbfl_beta=0.999))
+
+
+@functools.lru_cache(maxsize=64)
+def _make_train_fn(model: PeronaModel, epochs: int, patience: int,
+                   has_val: bool):
+    """Pure scanned training function, suitable for jit and vmap.
+
+    Signature (has_val): f(params0, tb, vb, y_val, hypers, key)
+    Signature (no val):  f(params0, tb, hypers, key)
+
+    ``hypers`` is a dict of traced scalars (see ``model_hypers``);
+    ``key`` is the epoch-rng key (reference: PRNGKey(seed + 1)).
+    """
+
+    def train_val(params0, tb, vb, y_val, hypers, key):
+        TRAINER_TRACES.tick()
+        opt = AdamW(lr=hypers["lr"], b2=0.999,
+                    weight_decay=hypers["weight_decay"], clip_norm=5.0)
+        loss_fn = lambda p, b, r: model.loss(p, b, r, hypers=hypers)
+
+        def body(carry, epoch):
+            (params, state, rng, best_p, best_f1, best_nl, best_e,
+             ls_best, ls_epoch, stopped) = carry
+            rng, sub = jax.random.split(rng)
+            active = ~stopped
+            (tl, _), grads = jax.value_and_grad(
+                loss_fn, has_aux=True)(params, tb, sub)
+            new_p, new_s, _ = opt.update(grads, state, params)
+            params = _tree_where(active, new_p, params)
+            state = _tree_where(active, new_s, state)
+            vl, _ = loss_fn(params, vb, jax.random.PRNGKey(0))
+            logits = model.forward(params, vb, train=False)["anom_logit"]
+            f1 = _f1_outlier(logits, y_val)
+            # checkpoint selection: lexicographic (f1, -loss) max
+            better = active & ((f1 > best_f1)
+                               | ((f1 == best_f1) & (-vl > best_nl)))
+            best_p = _tree_where(better, params, best_p)
+            best_f1 = jnp.where(better, f1, best_f1)
+            best_nl = jnp.where(better, -vl, best_nl)
+            best_e = jnp.where(better, epoch, best_e)
+            # early stopping on the val total loss ("elif": the patience
+            # check only fires on non-improving epochs)
+            improved = vl < ls_best
+            stop_now = active & ~improved & (epoch - ls_epoch > patience)
+            ls_best = jnp.where(active & improved, vl, ls_best)
+            ls_epoch = jnp.where(active & improved, epoch, ls_epoch)
+            stopped = stopped | stop_now
+            carry = (params, state, rng, best_p, best_f1, best_nl,
+                     best_e, ls_best, ls_epoch, stopped)
+            return carry, (tl, vl, f1, active)
+
+        carry0 = (params0, opt.init(params0), key, params0,
+                  jnp.float32(-1.0), jnp.float32(-jnp.inf),
+                  jnp.int32(0), jnp.float32(jnp.inf), jnp.int32(0),
+                  jnp.bool_(False))
+        carry, ys = jax.lax.scan(body, carry0, jnp.arange(epochs))
+        return {"params": carry[3], "final_params": carry[0],
+                "best_epoch": carry[6], "best_f1": carry[4],
+                "best_neg_loss": carry[5], "train_loss": ys[0],
+                "val_loss": ys[1], "val_f1": ys[2], "active": ys[3]}
+
+    def train_noval(params0, tb, hypers, key):
+        TRAINER_TRACES.tick()
+        opt = AdamW(lr=hypers["lr"], b2=0.999,
+                    weight_decay=hypers["weight_decay"], clip_norm=5.0)
+        loss_fn = lambda p, b, r: model.loss(p, b, r, hypers=hypers)
+
+        def body(carry, epoch):
+            params, state, rng = carry
+            rng, sub = jax.random.split(rng)
+            (tl, _), grads = jax.value_and_grad(
+                loss_fn, has_aux=True)(params, tb, sub)
+            params, state, _ = opt.update(grads, state, params)
+            return (params, state, rng), tl
+
+        carry, tl = jax.lax.scan(
+            body, (params0, opt.init(params0), key), jnp.arange(epochs))
+        return {"params": carry[0], "train_loss": tl}
+
+    return train_val if has_val else train_noval
+
+
+@functools.lru_cache(maxsize=64)
+def _jitted_train_fn(model: PeronaModel, epochs: int, patience: int,
+                     has_val: bool):
+    # the initial params carry is donated: one training run keeps a
+    # single live copy of (params, opt state) on device
+    return jax.jit(_make_train_fn(model, epochs, patience, has_val),
+                   donate_argnums=(0,))
 
 
 def train_perona(model: PeronaModel, train_batch: PeronaBatch,
@@ -50,6 +227,60 @@ def train_perona(model: PeronaModel, train_batch: PeronaBatch,
                  epochs: int = 100, lr: float = 3e-3,
                  weight_decay: float = 1e-4, patience: int = 25,
                  seed: int = 0, verbose: bool = False) -> TrainResult:
+    """Scanned, device-resident training: one compiled dispatch per run."""
+    params0 = model.init(jax.random.PRNGKey(seed))
+    tb = batch_to_jnp(train_batch)
+    hypers = model_hypers(model.cfg, lr, weight_decay)
+    key = jax.random.PRNGKey(seed + 1)
+    has_val = val_batch is not None
+    fn = _jitted_train_fn(canonical_model(model), epochs, patience,
+                          has_val)
+    t0 = TRAINER_TRACES.count
+    if has_val:
+        vb = batch_to_jnp(val_batch)
+        y_val = jnp.asarray(val_batch.anomaly)
+        out = fn(params0, tb, vb, y_val, hypers, key)
+    else:
+        out = fn(params0, tb, hypers, key)
+    stats = {"device_dispatches": 1,
+             "traced": TRAINER_TRACES.count - t0}
+
+    tl = np.asarray(out["train_loss"])
+    history = []
+    if has_val:
+        vl = np.asarray(out["val_loss"])
+        f1 = np.asarray(out["val_f1"])
+        active = np.asarray(out["active"])
+        for e in range(epochs):
+            if not active[e]:
+                break
+            history.append({"epoch": e, "train_loss": float(tl[e]),
+                            "val_loss": float(vl[e]),
+                            "val_f1_outlier": float(f1[e])})
+        params = out["params"]
+        best_epoch = int(out["best_epoch"])
+    else:
+        history = [{"epoch": e, "train_loss": float(tl[e])}
+                   for e in range(epochs)]
+        params = out["params"]
+        best_epoch = epochs - 1
+    if verbose:
+        for entry in history[::10]:
+            print(entry)
+    return TrainResult(params=params, history=history,
+                       best_epoch=best_epoch, stats=stats)
+
+
+def train_perona_reference(model: PeronaModel, train_batch: PeronaBatch,
+                           val_batch: Optional[PeronaBatch] = None, *,
+                           epochs: int = 100, lr: float = 3e-3,
+                           weight_decay: float = 1e-4, patience: int = 25,
+                           seed: int = 0,
+                           verbose: bool = False) -> TrainResult:
+    """Legacy host-driven loop: one jitted step dispatch per epoch, val
+    scoring and checkpoint selection on host. Kept as the parity oracle
+    and the sequential-HPO baseline for ``benchmarks/bench_tuning.py``.
+    """
     params = model.init(jax.random.PRNGKey(seed))
     opt = AdamW(lr=lr, b2=0.999, weight_decay=weight_decay, clip_norm=5.0)
     state = opt.init(params)
@@ -95,9 +326,7 @@ def train_perona(model: PeronaModel, train_batch: PeronaBatch,
             entry["val_loss"] = vl
             entry["val_f1_outlier"] = f1
             if (f1, -vl) > best[0]:
-                best = ((f1, -vl),
-                        jax.tree_util.tree_map(lambda x: x, params),
-                        epoch)
+                best = ((f1, -vl), params, epoch)
             if vl < loss_best[0]:
                 loss_best = (vl, epoch)
             elif epoch - loss_best[1] > patience:

@@ -1,9 +1,12 @@
 """Fused edge-softmax aggregation Pallas kernel (Perona GNN).
 
-Grid tiles the node axis; P (in-degree, 3) and F (code width) stay whole
-per block: block VMEM = bn * (P+1) * F * 4B ~ 0.5 MB for bn=512, F=64.
-The score reduction, masked softmax over P, and weighted combine are all
-fused in one VMEM round trip (VPU work; no MXU needed at F<=128).
+Grid tiles (node blocks x heads); P (in-degree, 3) and hd (per-head
+code width) stay whole per block: block VMEM = bn * (2P+1) * hd * 4B
+~ 0.5 MB for bn=512, hd=64. The score reduction, masked softmax over P,
+and weighted combine are all fused in one VMEM round trip (VPU work; no
+MXU needed at hd<=128). The heads axis lives in the grid, so multi-head
+attention needs no host-side per-head loop and no (hN*N, P, hd)
+reshape/transpose of the operands.
 """
 
 from __future__ import annotations
@@ -18,9 +21,9 @@ NEG_INF = -1e30
 
 
 def _kernel(q_ref, k_ref, v_ref, mask_ref, o_ref, att_ref, *, scale: float):
-    q = q_ref[...].astype(jnp.float32)  # (bn, F)
-    k = k_ref[...].astype(jnp.float32)  # (bn, P, F)
-    v = v_ref[...].astype(jnp.float32)
+    q = q_ref[:, 0, :].astype(jnp.float32)  # (bn, hd)
+    k = k_ref[:, :, 0, :].astype(jnp.float32)  # (bn, P, hd)
+    v = v_ref[:, :, 0, :].astype(jnp.float32)
     mask = mask_ref[...] != 0  # (bn, P)
     s = jnp.sum(q[:, None, :] * k, axis=-1) * scale  # (bn, P)
     s = jnp.where(mask, s, NEG_INF)
@@ -28,34 +31,38 @@ def _kernel(q_ref, k_ref, v_ref, mask_ref, o_ref, att_ref, *, scale: float):
     e = jnp.exp(s - m) * mask.astype(jnp.float32)
     denom = jnp.maximum(jnp.sum(e, axis=1, keepdims=True), 1e-30)
     att = e / denom
-    o_ref[...] = jnp.sum(att[:, :, None] * v, axis=1).astype(o_ref.dtype)
-    att_ref[...] = att.astype(att_ref.dtype)
+    o_ref[:, 0, :] = jnp.sum(att[:, :, None] * v, axis=1).astype(o_ref.dtype)
+    att_ref[:, 0, :] = att.astype(att_ref.dtype)
 
 
 def edge_softmax_aggregate(q, k, v, mask, *, scale: float,
                            block_n: int = 512, interpret: bool = False):
-    """q: (N, F); k/v: (N, P, F); mask: (N, P) (bool or int)."""
-    N, P, F = k.shape
+    """q: (N, H, hd); k/v: (N, P, H, hd); mask: (N, P) (bool or int).
+
+    Returns (out (N, H, hd), att (N, H, P)). The mask is shared across
+    heads; each (node-block, head) pair is one grid step.
+    """
+    N, P, H, hd = k.shape
     bn = min(block_n, N)
     assert N % bn == 0, (N, bn)
-    grid = (N // bn,)
+    grid = (N // bn, H)
     kernel = functools.partial(_kernel, scale=scale)
     out, att = pl.pallas_call(
         kernel,
         grid=grid,
         in_specs=[
-            pl.BlockSpec((bn, F), lambda i: (i, 0)),
-            pl.BlockSpec((bn, P, F), lambda i: (i, 0, 0)),
-            pl.BlockSpec((bn, P, F), lambda i: (i, 0, 0)),
-            pl.BlockSpec((bn, P), lambda i: (i, 0)),
+            pl.BlockSpec((bn, 1, hd), lambda i, h: (i, h, 0)),
+            pl.BlockSpec((bn, P, 1, hd), lambda i, h: (i, 0, h, 0)),
+            pl.BlockSpec((bn, P, 1, hd), lambda i, h: (i, 0, h, 0)),
+            pl.BlockSpec((bn, P), lambda i, h: (i, 0)),
         ],
         out_specs=[
-            pl.BlockSpec((bn, F), lambda i: (i, 0)),
-            pl.BlockSpec((bn, P), lambda i: (i, 0)),
+            pl.BlockSpec((bn, 1, hd), lambda i, h: (i, h, 0)),
+            pl.BlockSpec((bn, 1, P), lambda i, h: (i, h, 0)),
         ],
         out_shape=[
-            jax.ShapeDtypeStruct((N, F), q.dtype),
-            jax.ShapeDtypeStruct((N, P), jnp.float32),
+            jax.ShapeDtypeStruct((N, H, hd), q.dtype),
+            jax.ShapeDtypeStruct((N, H, P), jnp.float32),
         ],
         interpret=interpret,
     )(q, k, v, mask.astype(jnp.int32))

@@ -4,6 +4,9 @@ Perona's benchmark-execution graphs have a fixed in-degree (each node
 attends to its P=3 chronological predecessors), so messages are laid out
 densely as (N, P, F) with a validity mask — no scatter/gather at the
 aggregation site (TPU adaptation of PyG's TransformerConv, DESIGN.md §3).
+
+Both a single-head (q (N, F)) and a multi-head (q (N, H, hd)) layout are
+supported; the mask is shared across heads.
 """
 
 from __future__ import annotations
@@ -15,20 +18,31 @@ import jax.numpy as jnp
 NEG_INF = -1e30
 
 
+def _multi_head(q, k, v, mask, scale):
+    """q: (N, H, hd); k/v: (N, P, H, hd); mask: (N, P) bool."""
+    s = jnp.einsum("nhf,nphf->nhp", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) * scale
+    m3 = mask[:, None, :]
+    s = jnp.where(m3, s, NEG_INF)
+    m = jnp.max(s, axis=-1, keepdims=True)
+    e = jnp.exp(s - m) * m3
+    denom = jnp.sum(e, axis=-1, keepdims=True)
+    att = e / jnp.maximum(denom, 1e-30)  # (N, H, P)
+    out = jnp.einsum("nhp,nphf->nhf", att, v.astype(jnp.float32))
+    return out.astype(q.dtype), att
+
+
 def edge_softmax_aggregate(q, k, v, mask, scale=None):
-    """q: (N, F); k/v: (N, P, F); mask: (N, P) bool.
+    """Single-head: q (N, F); k/v (N, P, F) -> (out (N, F), att (N, P)).
+    Multi-head: q (N, H, hd); k/v (N, P, H, hd) -> (out (N, H, hd),
+    att (N, H, P)). mask: (N, P) bool, shared across heads.
 
     out[i] = sum_p softmax_p(q_i . k_ip * scale) * v_ip  (masked),
     att[i] the attention weights. Nodes with no valid neighbor get 0.
     """
-    N, P, F = k.shape
-    scale = 1.0 / math.sqrt(F) if scale is None else scale
-    s = jnp.einsum("nf,npf->np", q.astype(jnp.float32),
-                   k.astype(jnp.float32)) * scale
-    s = jnp.where(mask, s, NEG_INF)
-    m = jnp.max(s, axis=1, keepdims=True)
-    e = jnp.exp(s - m) * mask
-    denom = jnp.sum(e, axis=1, keepdims=True)
-    att = e / jnp.maximum(denom, 1e-30)
-    out = jnp.einsum("np,npf->nf", att, v.astype(jnp.float32))
-    return out.astype(q.dtype), att
+    scale = 1.0 / math.sqrt(q.shape[-1]) if scale is None else scale
+    if q.ndim == 2:
+        out, att = _multi_head(q[:, None, :], k[:, :, None, :],
+                               v[:, :, None, :], mask, scale)
+        return out[:, 0, :], att[:, 0, :]
+    return _multi_head(q, k, v, mask, scale)

@@ -29,6 +29,10 @@ class OptState:
 
 @dataclasses.dataclass(frozen=True)
 class AdamW:
+    """``lr`` and ``weight_decay`` may be python floats, schedules, or
+    *traced* jnp scalars — the vmapped HPO engine builds one AdamW per
+    trial inside a compiled program with per-trial values."""
+
     lr: Callable[[jnp.ndarray], jnp.ndarray] | float = 3e-4
     b1: float = 0.9
     b2: float = 0.95
@@ -61,6 +65,11 @@ class AdamW:
         b1c = 1.0 - self.b1 ** step.astype(jnp.float32)
         b2c = 1.0 - self.b2 ** step.astype(jnp.float32)
 
+        # static zero skips the decay op entirely; traced values always
+        # apply (a tracer has no truth value at trace time)
+        wd = self.weight_decay
+        apply_wd = not (isinstance(wd, (int, float)) and wd == 0)
+
         def upd(g, m, v, p):
             g = g.astype(jnp.float32) * scale
             m2 = self.b1 * m + (1 - self.b1) * g
@@ -68,8 +77,8 @@ class AdamW:
             mhat = m2 / b1c
             vhat = v2 / b2c
             delta = mhat / (jnp.sqrt(vhat) + self.eps)
-            if self.weight_decay and p.ndim >= 2:  # no decay on norms/bias
-                delta = delta + self.weight_decay * p.astype(jnp.float32)
+            if apply_wd and p.ndim >= 2:  # no decay on norms/bias
+                delta = delta + wd * p.astype(jnp.float32)
             p2 = p.astype(jnp.float32) - lr * delta
             return (p2.astype(p.dtype), m2.astype(self.state_dtype),
                     v2.astype(self.state_dtype))

@@ -21,6 +21,7 @@ from typing import Optional
 
 import numpy as np
 
+from repro.common.bucketing import next_pow2
 from repro.core.graph_data import P_PREDECESSORS, graph_structure
 from repro.core.model import PeronaModel
 from repro.core.preprocess import Preprocessor
@@ -31,10 +32,7 @@ MIN_BUCKET = 64
 
 def bucket_size(n: int, min_bucket: int = MIN_BUCKET) -> int:
     """Smallest power-of-two bucket >= n (>= min_bucket)."""
-    b = min_bucket
-    while b < n:
-        b *= 2
-    return b
+    return next_pow2(n, min_bucket)
 
 
 @dataclasses.dataclass

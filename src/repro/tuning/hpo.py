@@ -7,18 +7,31 @@ implements a seeded random search over the same space (quasi-random
 sampling; the TPE surrogate is unnecessary at this budget) and returns
 the best model under the trainer's checkpoint-selection rank
 (validation outlier F1, total loss as tie-break).
+
+Execution is device-resident: trials are bucketed by the two
+*shape/program-changing* hypers (``heads``, ``use_root_weight`` — the
+same shape-bucketing idea as ``serving.FingerprintEngine``), the scalar
+hypers (dropouts, CBFL gamma/beta, lr, weight decay) are stacked into
+arrays, and the scanned trainer (``core.trainer``) is ``jax.vmap``-ed
+over each bucket — a 100-trial search executes as <=8 compiled calls
+(one per occupied bucket) instead of 100 host-driven training loops.
+Bucket batch sizes are padded to powers of two so repeated searches
+reuse the compiled programs.
 """
 
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Optional, Tuple
+import functools
+from typing import Callable, Dict, List, Optional, Tuple
 
 import numpy as np
 
+from repro.common.bucketing import next_pow2
 from repro.core.graph_data import PeronaBatch
 from repro.core.model import PeronaConfig, PeronaModel
-from repro.core.trainer import TrainResult, evaluate, train_perona
+from repro.core import trainer as trainer_mod
+from repro.core.trainer import TrainResult, batch_to_jnp, train_perona
 
 # Table II search space
 SPACE = {
@@ -31,6 +44,11 @@ SPACE = {
     "lr": (1e-4, 1e-2),  # log-uniform
     "weight_decay": (1e-6, 1e-3),  # log-uniform
 }
+
+# scalar (traced) hypers stacked per bucket; heads/use_root_weight are
+# static: they change the compiled program, not just its inputs
+SCALAR_HYPERS = ("feature_dropout", "edge_dropout", "cbfl_gamma",
+                 "cbfl_beta", "lr", "weight_decay")
 
 
 @dataclasses.dataclass
@@ -45,6 +63,16 @@ class Trial:
         """Rank key matching train_perona's checkpoint selection:
         max val outlier F1, then min val loss as tie-break."""
         return (self.val_f1, -self.val_loss)
+
+
+@dataclasses.dataclass
+class SearchStats:
+    """Introspection for the vmapped search (asserted by tests)."""
+
+    n_buckets: int
+    bucket_sizes: Dict[Tuple[int, bool], int]
+    device_calls: int
+    trace_count: int  # scanned-trainer tracings during this search
 
 
 def sample_config(rng: np.random.Generator) -> Dict:
@@ -65,34 +93,49 @@ def sample_config(rng: np.random.Generator) -> Dict:
     }
 
 
-def search(base_cfg: PeronaConfig, train_batch: PeronaBatch,
-           val_batch: PeronaBatch, *, n_trials: int = 100,
-           epochs: int = 60, seed: int = 0, verbose: bool = False
-           ) -> Tuple[Trial, List[Trial]]:
-    """Returns (best trial with trained result, all trials)."""
+def _bucket_cfg(base_cfg: PeronaConfig, heads: int,
+                use_root_weight: bool) -> PeronaConfig:
+    return dataclasses.replace(base_cfg, heads=heads,
+                               use_root_weight=use_root_weight)
+
+
+def _trial_cfg(base_cfg: PeronaConfig, hp: Dict) -> PeronaConfig:
+    return dataclasses.replace(
+        base_cfg, heads=hp["heads"],
+        feature_dropout=hp["feature_dropout"],
+        edge_dropout=hp["edge_dropout"],
+        use_root_weight=hp["use_root_weight"],
+        cbfl_gamma=hp["cbfl_gamma"], cbfl_beta=hp["cbfl_beta"])
+
+
+def _sel_score(history) -> Tuple[float, float]:
+    """Score of the checkpoint the trainer actually kept: the F1-best
+    epoch (loss as tie-break), mirroring its selection rule."""
+    sel = [(h.get("val_f1_outlier", 0.0), -h["val_loss"])
+           for h in history if "val_loss" in h]
+    return max(sel) if sel else (0.0, -float("inf"))
+
+
+def search_sequential(base_cfg: PeronaConfig, train_batch: PeronaBatch,
+                      val_batch: PeronaBatch, *, n_trials: int = 100,
+                      epochs: int = 60, seed: int = 0,
+                      patience: int = 25, verbose: bool = False,
+                      train_fn: Optional[Callable] = None
+                      ) -> Tuple[Trial, List[Trial]]:
+    """One host-driven training per trial. ``train_fn`` defaults to the
+    scanned trainer; pass ``trainer.train_perona_reference`` for the
+    legacy per-epoch loop (the benchmark baseline)."""
+    train_fn = train_perona if train_fn is None else train_fn
     rng = np.random.default_rng(seed)
     trials: List[Trial] = []
     best: Optional[Trial] = None
     for t in range(n_trials):
         hp = sample_config(rng)
-        cfg = dataclasses.replace(
-            base_cfg,
-            heads=hp["heads"],
-            feature_dropout=hp["feature_dropout"],
-            edge_dropout=hp["edge_dropout"],
-            use_root_weight=hp["use_root_weight"],
-            cbfl_gamma=hp["cbfl_gamma"],
-            cbfl_beta=hp["cbfl_beta"],
-        )
-        model = PeronaModel(cfg)
-        res = train_perona(model, train_batch, val_batch, epochs=epochs,
-                           lr=hp["lr"], weight_decay=hp["weight_decay"],
-                           seed=seed + t)
-        # score the checkpoint train_perona actually kept: the F1-best
-        # epoch (loss as tie-break), mirroring its selection rule
-        sel = [(h.get("val_f1_outlier", 0.0), -h["val_loss"])
-               for h in res.history if "val_loss" in h]
-        f1, neg_vl = max(sel) if sel else (0.0, -float("inf"))
+        model = PeronaModel(_trial_cfg(base_cfg, hp))
+        res = train_fn(model, train_batch, val_batch, epochs=epochs,
+                       lr=hp["lr"], weight_decay=hp["weight_decay"],
+                       patience=patience, seed=seed + t)
+        f1, neg_vl = _sel_score(res.history)
         trial = Trial(params=hp, val_loss=-neg_vl, val_f1=f1, result=res)
         trials.append(trial)
         if best is None or trial.score > best.score:
@@ -105,3 +148,124 @@ def search(base_cfg: PeronaConfig, train_batch: PeronaBatch,
         if trial is not best:
             trial.result = None
     return best, trials
+
+
+def search(base_cfg: PeronaConfig, train_batch: PeronaBatch,
+           val_batch: PeronaBatch, *, n_trials: int = 100,
+           epochs: int = 60, seed: int = 0, patience: int = 25,
+           verbose: bool = False, vmapped: bool = True,
+           return_stats: bool = False):
+    """Returns (best trial with trained result, all trials) — plus a
+    :class:`SearchStats` when ``return_stats`` is set."""
+    if not vmapped:
+        best, trials = search_sequential(
+            base_cfg, train_batch, val_batch, n_trials=n_trials,
+            epochs=epochs, seed=seed, patience=patience, verbose=verbose)
+        if return_stats:
+            return best, trials, None
+        return best, trials
+
+    import jax
+    import jax.numpy as jnp
+
+    rng = np.random.default_rng(seed)
+    hps = [sample_config(rng) for _ in range(n_trials)]
+    buckets: Dict[Tuple[int, bool], List[int]] = {}
+    for t, hp in enumerate(hps):
+        key = (hp["heads"], hp["use_root_weight"])
+        buckets.setdefault(key, []).append(t)
+
+    tb = batch_to_jnp(train_batch)
+    vb = batch_to_jnp(val_batch)
+    y_val = jnp.asarray(val_batch.anomaly)
+
+    traces0 = trainer_mod.TRAINER_TRACES.count
+    device_calls = 0
+    trials: List[Optional[Trial]] = [None] * n_trials
+    # per bucket, keep only the bucket-best trial's checkpoint/history
+    # (the stacked per-trial outputs are dropped as soon as the bucket
+    # is scored — memory stays O(one model), like the sequential path)
+    bucket_best: Dict[Tuple[int, bool], Tuple[int, dict, dict, int]] = {}
+    for bkey in sorted(buckets):
+        heads, urw = bkey
+        idxs = buckets[bkey]
+        model = PeronaModel(_bucket_cfg(base_cfg, heads, urw))
+        # pad the trial axis to a power of two: repeated searches with
+        # similar bucket occupancy reuse one compiled program per bucket
+        b2 = next_pow2(len(idxs))
+        padded = idxs + [idxs[0]] * (b2 - len(idxs))
+        init_keys = jnp.stack(
+            [jax.random.PRNGKey(seed + t) for t in padded])
+        train_keys = jnp.stack(
+            [jax.random.PRNGKey(seed + t + 1) for t in padded])
+        params0 = jax.vmap(model.init)(init_keys)
+        hypers = {name: jnp.asarray([hps[t][name] for t in padded],
+                                    jnp.float32)
+                  for name in SCALAR_HYPERS}
+        fn = _vmapped_train_fn(model, epochs, patience)
+        out = fn(params0, tb, vb, y_val, hypers, train_keys)
+        device_calls += 1
+        vls = np.asarray(out["val_loss"])
+        f1s = np.asarray(out["val_f1"])
+        act = np.asarray(out["active"])
+        for j, t in enumerate(idxs):
+            sel = [(float(f1s[j, e]), -float(vls[j, e]))
+                   for e in range(epochs) if act[j, e]]
+            f1, neg_vl = max(sel) if sel else (0.0, -float("inf"))
+            trials[t] = Trial(params=hps[t], val_loss=-neg_vl, val_f1=f1)
+        jb = max(range(len(idxs)), key=lambda j: trials[idxs[j]].score)
+        bucket_best[bkey] = (
+            idxs[jb],
+            jax.tree_util.tree_map(lambda x: x[jb], out["params"]),
+            {"train_loss": np.asarray(out["train_loss"][jb]),
+             "val_loss": vls[jb], "val_f1": f1s[jb], "active": act[jb]},
+            int(out["best_epoch"][jb]))
+        del out
+        if verbose:
+            done = sum(tr is not None for tr in trials)
+            print(f"[hpo bucket heads={heads} root={urw}] "
+                  f"{len(idxs)} trials ({done}/{n_trials} done)")
+
+    best_t = max(range(n_trials), key=lambda t: trials[t].score)
+    best = trials[best_t]
+    bkey = (hps[best_t]["heads"], hps[best_t]["use_root_weight"])
+    kept_t, best_params, hist, best_epoch = bucket_best[bkey]
+    assert kept_t == best_t  # global best is its bucket's best
+    history = []
+    for e in range(epochs):
+        if not hist["active"][e]:
+            break
+        history.append({"epoch": e,
+                        "train_loss": float(hist["train_loss"][e]),
+                        "val_loss": float(hist["val_loss"][e]),
+                        "val_f1_outlier": float(hist["val_f1"][e])})
+    best.result = TrainResult(params=best_params, history=history,
+                              best_epoch=best_epoch)
+
+    stats = SearchStats(
+        n_buckets=len(buckets),
+        bucket_sizes={k: len(v) for k, v in buckets.items()},
+        device_calls=device_calls,
+        trace_count=trainer_mod.TRAINER_TRACES.count - traces0)
+    if return_stats:
+        return best, [t for t in trials], stats
+    return best, [t for t in trials]
+
+
+def _vmapped_train_fn(model: PeronaModel, epochs: int, patience: int):
+    """One jitted vmapped scanned trainer per (canonical model config,
+    epochs, patience); cached so repeated searches skip compilation."""
+    return _vmapped_train_fn_canon(trainer_mod.canonical_model(model),
+                                   epochs, patience)
+
+
+@functools.lru_cache(maxsize=64)
+def _vmapped_train_fn_canon(canon: PeronaModel, epochs: int,
+                            patience: int):
+    import jax
+
+    raw = trainer_mod._make_train_fn(canon, epochs, patience, True)
+    # the stacked params carry is donated, like the single-run trainer:
+    # one live copy of (params, opt state) per bucket
+    return jax.jit(jax.vmap(raw, in_axes=(0, None, None, None, 0, 0)),
+                   donate_argnums=(0,))

@@ -1,0 +1,28 @@
+"""Shared jit trace-count assertion helper.
+
+Registers the compile-amortization pattern from ``test_engine.py`` (a
+counter that increments at trace time only) for reuse: wrap the code
+under test in :func:`expect_traces` and the helper asserts exactly how
+many jit tracings happened inside the block.
+
+Works with any counter object exposing either ``count``
+(``repro.core.trainer.TraceCount``) or ``trace_count``
+(``serving.FingerprintEngine``).
+"""
+
+import contextlib
+
+
+def _read(counter) -> int:
+    if hasattr(counter, "trace_count"):
+        return counter.trace_count
+    return counter.count
+
+
+@contextlib.contextmanager
+def expect_traces(counter, n: int):
+    """Assert exactly ``n`` jit tracings happen inside the block."""
+    before = _read(counter)
+    yield
+    got = _read(counter) - before
+    assert got == n, f"expected {n} jit tracings inside block, got {got}"

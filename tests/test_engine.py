@@ -3,6 +3,7 @@
 import jax
 import numpy as np
 import pytest
+from _trace_utils import expect_traces
 
 from repro.core.graph_data import build_graphs
 from repro.core.model import PeronaConfig, PeronaModel
@@ -61,19 +62,18 @@ def test_engine_compiles_once_per_bucket(small_setup):
     runner, machines, frame, pre, model, params = small_setup
     engine = FingerprintEngine(model, params, pre)
     assert engine.trace_count == 0
-    r1 = engine.score(frame)  # 120 rows -> bucket 128
-    assert engine.trace_count == 1
-    engine.score(frame)
-    assert engine.trace_count == 1
-    # a different round with the same bucket: no new trace
-    other = runner.run_frame(machines, runs_per_type=9)  # 108 rows
-    assert bucket_size(len(other)) == r1.n_padded
-    engine.score(other)
-    assert engine.trace_count == 1
+    with expect_traces(engine, 1):
+        r1 = engine.score(frame)  # 120 rows -> bucket 128
+    with expect_traces(engine, 0):
+        engine.score(frame)
+        # a different round with the same bucket: no new trace
+        other = runner.run_frame(machines, runs_per_type=9)  # 108 rows
+        assert bucket_size(len(other)) == r1.n_padded
+        engine.score(other)
     # crossing a bucket boundary traces exactly once more
-    bigger = runner.run_frame(machines, runs_per_type=20)  # 240 rows
-    engine.score(bigger)
-    assert engine.trace_count == 2
+    with expect_traces(engine, 1):
+        bigger = runner.run_frame(machines, runs_per_type=20)  # 240 rows
+        engine.score(bigger)
 
 
 def test_watchdog_rounds_amortize_one_compile(small_setup):

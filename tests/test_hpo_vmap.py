@@ -1,0 +1,96 @@
+"""Vmapped HPO buckets vs sequential per-trial training.
+
+The vmapped search buckets trials by (heads, use_root_weight) and runs
+one compiled vmapped scan per bucket; each trial's (val_f1, val_loss)
+score must reproduce a plain sequential per-trial training, and the
+engine must compile exactly once per occupied bucket.
+"""
+
+import numpy as np
+import pytest
+from _trace_utils import expect_traces
+
+from repro.core import trainer as trainer_mod
+from repro.core.graph_data import build_graphs, chronological_split
+from repro.core.model import PeronaConfig
+from repro.core.preprocess import Preprocessor
+from repro.core.trainer import train_perona_reference
+from repro.fingerprint.runner import SuiteRunner
+from repro.tuning import hpo
+
+N_TRIALS = 6
+EPOCHS = 8
+
+
+@pytest.fixture(scope="module")
+def setup():
+    runner = SuiteRunner(seed=7)
+    machines = {"m0": "e2-medium", "m1": "n2-standard-4"}
+    frame = runner.run_frame(machines, runs_per_type=10,
+                             stress_fraction=0.2)
+    tr, va, _ = chronological_split(frame, (0.7, 0.3, 0.0))
+    pre = Preprocessor().fit(tr)
+    tb, vb = build_graphs(tr, pre), build_graphs(va, pre)
+    cfg = PeronaConfig(feature_dim=pre.feature_dim,
+                       edge_dim=tb.edge.shape[-1])
+    return cfg, tb, vb
+
+
+@pytest.fixture(scope="module")
+def vmapped(setup):
+    cfg, tb, vb = setup
+    return hpo.search(cfg, tb, vb, n_trials=N_TRIALS, epochs=EPOCHS,
+                      seed=0, return_stats=True)
+
+
+def test_vmapped_reproduces_sequential_scores(setup, vmapped):
+    cfg, tb, vb = setup
+    best_v, trials_v, _ = vmapped
+    best_s, trials_s = hpo.search(cfg, tb, vb, n_trials=N_TRIALS,
+                                  epochs=EPOCHS, seed=0, vmapped=False)
+    assert [t.params for t in trials_v] == [t.params for t in trials_s]
+    for a, b in zip(trials_v, trials_s):
+        np.testing.assert_allclose(a.val_f1, b.val_f1, atol=1e-6)
+        np.testing.assert_allclose(a.val_loss, b.val_loss, atol=1e-4)
+    assert best_v.params == best_s.params
+
+
+def test_vmapped_close_to_legacy_reference_loop(setup, vmapped):
+    """And against the pinned legacy per-epoch loop (host float64 F1,
+    static hypers): F1 counts must agree exactly, losses closely."""
+    cfg, tb, vb = setup
+    _, trials_v, _ = vmapped
+    _, trials_r = hpo.search_sequential(
+        cfg, tb, vb, n_trials=N_TRIALS, epochs=EPOCHS, seed=0,
+        train_fn=train_perona_reference)
+    for a, b in zip(trials_v, trials_r):
+        np.testing.assert_allclose(a.val_f1, b.val_f1, atol=1e-6)
+        np.testing.assert_allclose(a.val_loss, b.val_loss, atol=2e-3)
+
+
+def test_compiles_once_per_bucket(setup, vmapped):
+    """<=8 compiled calls for any search: one vmapped scanned trainer
+    per occupied (heads, use_root_weight) bucket — and zero new traces
+    for a repeat search (compile caches are keyed on the canonical
+    config + padded bucket size)."""
+    cfg, tb, vb = setup
+    _, _, stats = vmapped
+    assert stats.n_buckets <= 8
+    assert stats.device_calls == stats.n_buckets
+    assert stats.trace_count == stats.n_buckets
+    with expect_traces(trainer_mod.TRAINER_TRACES, 0):
+        _, _, stats2 = hpo.search(cfg, tb, vb, n_trials=N_TRIALS,
+                                  epochs=EPOCHS, seed=0,
+                                  return_stats=True)
+    assert stats2.trace_count == 0
+
+
+def test_best_trial_has_trained_result(vmapped):
+    best, trials, _ = vmapped
+    assert best.result is not None
+    assert best.score == max(t.score for t in trials)
+    assert len(best.result.history) >= 1
+    assert {"epoch", "train_loss", "val_loss",
+            "val_f1_outlier"} <= set(best.result.history[0])
+    # every non-best trial's result was freed / never materialized
+    assert sum(t.result is not None for t in trials) == 1

@@ -1,0 +1,113 @@
+"""Scanned device-resident trainer vs the legacy per-epoch loop.
+
+``train_perona`` runs the whole epoch loop as one ``jax.lax.scan``
+dispatch (on-device val loss / outlier F1 / checkpoint selection /
+early stopping); ``train_perona_reference`` is the pinned legacy loop.
+Parity must hold: same best epoch, same history length (early stopping
+included), losses and parameters allclose.
+"""
+
+import jax
+import numpy as np
+import pytest
+from _trace_utils import expect_traces
+
+from repro.core.graph_data import build_graphs, chronological_split
+from repro.core.model import PeronaConfig, PeronaModel
+from repro.core.preprocess import Preprocessor
+from repro.core.trainer import (TRAINER_TRACES, train_perona,
+                                train_perona_reference)
+from repro.fingerprint.runner import SuiteRunner
+
+
+@pytest.fixture(scope="module")
+def small_setup():
+    runner = SuiteRunner(seed=7)
+    machines = {"m0": "e2-medium", "m1": "n2-standard-4"}
+    frame = runner.run_frame(machines, runs_per_type=12,
+                             stress_fraction=0.2)
+    tr, va, _ = chronological_split(frame, (0.7, 0.3, 0.0))
+    pre = Preprocessor().fit(tr)
+    tb, vb = build_graphs(tr, pre), build_graphs(va, pre)
+    cfg = PeronaConfig(feature_dim=pre.feature_dim,
+                       edge_dim=tb.edge.shape[-1])
+    return PeronaModel(cfg), tb, vb
+
+
+def _assert_params_close(a, b, atol):
+    for x, y in zip(jax.tree_util.tree_leaves(a),
+                    jax.tree_util.tree_leaves(b)):
+        np.testing.assert_allclose(np.asarray(x), np.asarray(y),
+                                   atol=atol)
+
+
+def test_scanned_matches_reference(small_setup):
+    model, tb, vb = small_setup
+    ref = train_perona_reference(model, tb, vb, epochs=40, seed=3)
+    scan = train_perona(model, tb, vb, epochs=40, seed=3)
+    assert scan.best_epoch == ref.best_epoch
+    assert len(scan.history) == len(ref.history)
+    for a, b in zip(ref.history, scan.history):
+        assert a["epoch"] == b["epoch"]
+        np.testing.assert_allclose(b["train_loss"], a["train_loss"],
+                                   atol=2e-3)
+        np.testing.assert_allclose(b["val_loss"], a["val_loss"],
+                                   atol=2e-3)
+        np.testing.assert_allclose(b["val_f1_outlier"],
+                                   a["val_f1_outlier"], atol=5e-2)
+    # the selected checkpoints are the same epoch's params
+    _assert_params_close(ref.params, scan.params, atol=1e-3)
+
+
+def test_early_stopping_parity(small_setup):
+    """The masked stopped-flag must reproduce the reference break
+    epoch-for-epoch (history includes the breaking epoch)."""
+    model, tb, vb = small_setup
+    ref = train_perona_reference(model, tb, vb, epochs=60, patience=0,
+                                 seed=0)
+    scan = train_perona(model, tb, vb, epochs=60, patience=0, seed=0)
+    assert len(ref.history) < 60, "patience must actually trigger"
+    assert len(scan.history) == len(ref.history)
+    assert scan.best_epoch == ref.best_epoch
+
+
+def test_no_val_matches_reference(small_setup):
+    model, tb, _ = small_setup
+    ref = train_perona_reference(model, tb, epochs=10, seed=1)
+    scan = train_perona(model, tb, epochs=10, seed=1)
+    assert scan.best_epoch == ref.best_epoch == 9
+    assert len(scan.history) == len(ref.history) == 10
+    _assert_params_close(ref.params, scan.params, atol=1e-4)
+
+
+def test_single_dispatch_no_per_epoch_host_transfers(small_setup):
+    """The whole training run is ONE compiled call: the first run with
+    a new shape traces once; further runs (any seed) re-use it, i.e.
+    the epoch loop lives on device — zero per-epoch dispatches or
+    transfers."""
+    model, tb, vb = small_setup
+    with expect_traces(TRAINER_TRACES, 1):
+        res = train_perona(model, tb, vb, epochs=17, seed=0)
+    assert res.stats["device_dispatches"] == 1
+    assert res.stats["traced"] == 1
+    with expect_traces(TRAINER_TRACES, 0):
+        res2 = train_perona(model, tb, vb, epochs=17, seed=5)
+        res3 = train_perona(model, tb, vb, epochs=17, seed=6)
+    assert res2.stats["device_dispatches"] == 1
+    assert res2.stats["traced"] == 0
+    assert res3.stats["traced"] == 0
+
+
+def test_scalar_hypers_do_not_retrace(small_setup):
+    """lr / weight decay / dropouts / CBFL gamma+beta are traced
+    values: changing them must not trigger a new compile."""
+    import dataclasses
+
+    model, tb, vb = small_setup
+    train_perona(model, tb, vb, epochs=9, seed=0)  # populate cache
+    cfg2 = dataclasses.replace(model.cfg, feature_dropout=0.23,
+                               edge_dropout=0.04, cbfl_gamma=1.1,
+                               cbfl_beta=0.95)
+    with expect_traces(TRAINER_TRACES, 0):
+        train_perona(PeronaModel(cfg2), tb, vb, epochs=9, seed=1,
+                     lr=1e-4, weight_decay=3e-5)
