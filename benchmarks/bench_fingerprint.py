@@ -7,17 +7,19 @@ from __future__ import annotations
 import time
 
 
-def _acquisition_rows(rows):
+def _acquisition_rows(rows, runs_per_type: int = 100):
     from repro.fingerprint.runner import SuiteRunner
 
     machines = {f"node-{i}": "e2-medium" for i in range(1, 4)}
 
     t0 = time.time()
-    ref = SuiteRunner(seed=0).run_reference(machines, runs_per_type=100,
+    ref = SuiteRunner(seed=0).run_reference(machines,
+                                            runs_per_type=runs_per_type,
                                             stress_fraction=0.2)
     t_ref = time.time() - t0
     t0 = time.time()
-    frame = SuiteRunner(seed=0).run_frame(machines, runs_per_type=100,
+    frame = SuiteRunner(seed=0).run_frame(machines,
+                                          runs_per_type=runs_per_type,
                                           stress_fraction=0.2)
     t_col = time.time() - t0
     n = len(frame)
@@ -51,13 +53,13 @@ def _scoring_rows(rows, model, params, pre, frame):
     rows.append(("fingerprint.score_traces", "", engine.trace_count))
 
 
-def run(rows):
+def run(rows, runs_per_type: int = 100, epochs: int = 100):
     from repro.core.graph_data import build_graphs, chronological_split
     from repro.core.model import PeronaConfig, PeronaModel
     from repro.core.preprocess import Preprocessor
     from repro.core.trainer import evaluate, train_perona
 
-    frame = _acquisition_rows(rows)
+    frame = _acquisition_rows(rows, runs_per_type)
     train_r, val_r, test_r = chronological_split(frame)
     pre = Preprocessor().fit(train_r)
     tb, vb, teb = (build_graphs(r, pre) for r in (train_r, val_r, test_r))
@@ -65,7 +67,7 @@ def run(rows):
                        edge_dim=tb.edge.shape[-1])
     model = PeronaModel(cfg)
     t0 = time.time()
-    res = train_perona(model, tb, vb, epochs=100, seed=0)
+    res = train_perona(model, tb, vb, epochs=epochs, seed=0)
     train_us = (time.time() - t0) * 1e6
     m = evaluate(model, res.params, teb)
     rows.append(("fingerprint.metrics_raw", "", pre.raw_feature_count))

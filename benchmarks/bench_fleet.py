@@ -1,0 +1,180 @@
+"""Fleet service throughput: per-request loop vs micro-batched vs
+sharded scoring (requests/s), written to ``BENCH_fleet.json``.
+
+Three paths score identical streaming per-node re-fingerprinting
+rounds (round timestamps follow the stored history) and produce the
+same new-row scores:
+
+- ``loop``    — one ``FingerprintEngine.score`` dispatch per request,
+  rescoring a per-node history window (the pre-fleet serving path:
+  per-request Python preprocessing + one device dispatch each);
+- ``batched`` — ``FleetScoringService`` micro-batches every request of
+  a round into one stacked dispatch per shape bucket, gathers context
+  from the store's feature cache, and scores only the model's exact
+  receptive field (P x tag_hops rows per chain — bit-identical to the
+  window rescore for streaming rounds, see tests/test_fleet.py);
+- ``sharded`` — the same service over all available devices
+  (``shard_map`` over the request axis; run under
+  ``XLA_FLAGS=--xla_force_host_platform_device_count=8`` to see >1).
+
+Scoring throughput does not depend on the parameter values, so the
+model stays untrained (init only).
+"""
+
+from __future__ import annotations
+
+import time
+
+DAY = 86400.0
+
+
+def _setup(n_nodes: int, context_runs: int, seed: int = 0):
+    import jax
+
+    from repro.core.graph_data import build_graphs
+    from repro.core.model import PeronaConfig, PeronaModel
+    from repro.core.preprocess import Preprocessor
+    from repro.fingerprint.runner import SuiteRunner
+
+    runner = SuiteRunner(seed=seed)
+    machines = {f"fleet-{i}": "e2-medium" for i in range(n_nodes)}
+    history = runner.run_frame(machines, runs_per_type=context_runs,
+                               stress_fraction=0.2)
+    pre = Preprocessor().fit(history)
+    batch = build_graphs(history, pre)
+    cfg = PeronaConfig(feature_dim=pre.feature_dim,
+                       edge_dim=batch.edge.shape[-1])
+    model = PeronaModel(cfg)
+    params = model.init(jax.random.PRNGKey(seed))
+    return machines, history, pre, model, params
+
+
+def _rounds(machines, n_rounds: int, seed: int = 1):
+    """Streaming rounds: round k's timestamps land in day k+1, after
+    the day-0 history."""
+    from repro.fingerprint.runner import SuiteRunner
+
+    runner = SuiteRunner(seed=seed)
+    return [runner.run_frame(machines, runs_per_type=1,
+                             t_offset=(k + 1) * DAY)
+            for k in range(n_rounds)]
+
+
+def _split_by_node(frame):
+    import numpy as np
+
+    return [(frame.machines[c],
+             frame.select(np.nonzero(frame.machine_code == c)[0]))
+            for c in np.unique(frame.machine_code)]
+
+
+def _run_loop(model, params, pre, history, rounds, per_chain: int):
+    """Per-request baseline: store-assembled context, one engine
+    dispatch per node request. Returns (warm seconds, n_requests)."""
+    from repro.fleet import FingerprintStore
+    from repro.serving.engine import FingerprintEngine
+
+    engine = FingerprintEngine(model, params, pre)
+    store = FingerprintStore()
+    store.append(history)
+
+    def one_round(frame):
+        n = 0
+        first = store.append(frame)
+        f = store.frame
+        for node, _ in _split_by_node(frame):
+            sel, _ = store.context_with_new(first, per_chain,
+                                            node=node)
+            engine.score(f.select(sel))
+            n += 1
+        store.compact(per_chain)
+        return n
+
+    one_round(rounds[0])  # warm (compile)
+    n = 0
+    t0 = time.perf_counter()
+    for frame in rounds[1:]:
+        n += one_round(frame)
+    return time.perf_counter() - t0, n
+
+
+def _run_service(model, params, pre, history, rounds, sharded: bool,
+                 burst: int = 1):
+    """Micro-batched service path (receptive-field-exact context).
+    ``burst`` rounds are queued per flush — the saturated-queue regime
+    micro-batching exists for: per-node rounds of one burst coalesce
+    into one request, so context is assembled and scored once per
+    burst instead of once per round (ancestry closure keeps the scores
+    identical to round-by-round flushing). Returns
+    (warm seconds, n_node_rounds, svc)."""
+    from repro.fleet import FleetScoringService
+
+    svc = FleetScoringService(model, params, pre, sharded=sharded)
+    svc.seed_history(history)
+    svc.score_round(rounds[0])  # warm (compile)
+    n = 0
+    t0 = time.perf_counter()
+    for i in range(1, len(rounds), burst):
+        chunk = rounds[i:i + burst]
+        for frame in chunk:
+            svc.submit(frame)
+        n += len(svc.flush()) * len(chunk)
+    return time.perf_counter() - t0, n, svc
+
+
+def run(rows, n_nodes: int = 32, context_runs: int = 16,
+        n_rounds: int = 4, quick: bool = False):
+    import jax
+
+    if quick:
+        n_nodes, n_rounds = 8, 5
+    window = 16  # per-chain history window of the per-request loop
+    burst = 4  # queued rounds per flush in the saturated regime
+    machines, history, pre, model, params = _setup(n_nodes,
+                                                   context_runs)
+
+    t_loop, n_loop = _run_loop(model, params, pre, history,
+                               _rounds(machines, n_rounds), window)
+    t_rr, n_rr, _ = _run_service(model, params, pre, history,
+                                 _rounds(machines, n_rounds),
+                                 sharded=False, burst=1)
+    t_bat, n_bat, svc = _run_service(model, params, pre, history,
+                                     _rounds(machines,
+                                             n_rounds * burst),
+                                     sharded=False, burst=burst)
+    t_shd, n_shd, svc_s = _run_service(model, params, pre, history,
+                                       _rounds(machines,
+                                               n_rounds * burst),
+                                       sharded=True, burst=burst)
+
+    rps_loop = n_loop / max(t_loop, 1e-9)
+    rps_rr = n_rr / max(t_rr, 1e-9)
+    rps_bat = n_bat / max(t_bat, 1e-9)
+    rps_shd = n_shd / max(t_shd, 1e-9)
+    rows.append(("fleet.loop.requests_per_s",
+                 f"{t_loop / max(n_loop, 1) * 1e6:.0f}",
+                 f"{rps_loop:.1f}"))
+    rows.append(("fleet.batched_per_round.requests_per_s",
+                 f"{t_rr / max(n_rr, 1) * 1e6:.0f}",
+                 f"{rps_rr:.1f}"))
+    rows.append(("fleet.batched.requests_per_s",
+                 f"{t_bat / max(n_bat, 1) * 1e6:.0f}",
+                 f"{rps_bat:.1f}"))
+    rows.append(("fleet.sharded.requests_per_s",
+                 f"{t_shd / max(n_shd, 1) * 1e6:.0f}",
+                 f"{rps_shd:.1f}"))
+    rows.append(("fleet.batched_speedup", "",
+                 f"{rps_bat / max(rps_loop, 1e-9):.1f}x"))
+    rows.append(("fleet.sharded_speedup", "",
+                 f"{rps_shd / max(rps_loop, 1e-9):.1f}x"))
+    rows.append(("fleet.burst_rounds", "", burst))
+    rows.append(("fleet.devices", "", jax.device_count()))
+    rows.append(("fleet.requests", "", n_bat))
+    rows.append(("fleet.batched.dispatches", "",
+                 svc.stats["dispatches"]))
+    rows.append(("fleet.batched.traces", "", svc.trace_count))
+    rows.append(("fleet.store_rows", "", svc.stats["store_rows"]))
+    # workload parameters, recorded into BENCH_fleet.json by run.py
+    return {"n_nodes": n_nodes, "context_runs": context_runs,
+            "n_rounds": n_rounds, "burst": burst, "window": window,
+            "devices": jax.device_count()}

@@ -3,14 +3,15 @@
 from __future__ import annotations
 
 
-def run(rows):
+def run(rows, runs_per_type: int = 10, epochs: int = 40):
     from repro.tuning import lotaru, tarema
     from repro.tuning.perona_weights import (calibrate_scores,
                                              fingerprint_machine_scores)
 
     gcp = ("e2-medium", "n1-standard-4", "n2-standard-4", "c2-standard-4")
     scores, proxies = fingerprint_machine_scores(
-        gcp, runs_per_type=10, epochs=40, return_calibration=True)
+        gcp, runs_per_type=runs_per_type, epochs=epochs,
+        return_calibration=True)
     cal = calibrate_scores(scores, proxies)
     tab = lotaru.evaluate_predictors(cal)
     for method in ("naive", "online_m", "online_p", "lotaru", "perona"):

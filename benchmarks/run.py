@@ -5,17 +5,23 @@ Prints ``name,us_per_call,derived`` CSV. Modules:
   bench_tuning      — paper §IV-D Fig. 5 (CherryPick/Arrow +- Perona)
                       + HPO engine (sequential vs vmapped) wall-clock
   bench_workflows   — paper §IV-E Table III (Lotaru) + Tarema groups
+  bench_fleet       — fleet service throughput (loop vs micro-batched
+                      vs sharded requests/s)
   bench_kernels     — kernel-path microbenchmarks
   bench_roofline    — dry-run roofline summary (deliverable g)
 
-The tuning module's rows are also written to ``BENCH_tuning.json`` so
-the training/HPO perf trajectory is tracked across PRs.
+The tuning module's rows are written to ``BENCH_tuning.json`` and the
+fleet module's to ``BENCH_fleet.json`` so both perf trajectories are
+tracked across PRs.
 
 Usage: PYTHONPATH=src python -m benchmarks.run [--only <module-substr>]
+``--quick`` shrinks workload counts; ``--smoke`` (the CI step) shrinks
+them further so every module imports and runs in a few minutes.
 """
 
 import argparse
 import json
+import os
 import sys
 import time
 import traceback
@@ -25,26 +31,40 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default="")
     ap.add_argument("--quick", action="store_true",
-                    help="reduced workload counts for smoke usage")
+                    help="reduced workload counts")
+    ap.add_argument("--smoke", action="store_true",
+                    help="minimal counts: the CI import-and-run check")
     ap.add_argument("--json-out", default="BENCH_tuning.json",
                     help="where to write the tuning rows as JSON")
+    ap.add_argument("--fleet-json-out", default="BENCH_fleet.json",
+                    help="where to write the fleet rows as JSON")
     args = ap.parse_args()
+    quick = args.quick or args.smoke
 
-    from benchmarks import (bench_fingerprint, bench_kernels,
-                            bench_roofline, bench_tuning, bench_workflows)
+    from benchmarks import (bench_fingerprint, bench_fleet,
+                            bench_kernels, bench_roofline, bench_tuning,
+                            bench_workflows)
 
-    n_workloads = 6 if args.quick else 18
-    hpo_trials = 8 if args.quick else 32
-    hpo_epochs = 8 if args.quick else 25
+    n_workloads = (3 if args.smoke else 6) if quick else 18
+    hpo_trials = (4 if args.smoke else 8) if quick else 32
+    hpo_epochs = (4 if args.smoke else 8) if quick else 25
+    fp_runs = 25 if args.smoke else 100
+    fp_epochs = 15 if args.smoke else 100
+    wf_runs = 4 if args.smoke else 10
+    wf_epochs = 10 if args.smoke else 40
     modules = [
-        ("fingerprint", lambda rows: bench_fingerprint.run(rows)),
+        ("fingerprint", lambda rows: bench_fingerprint.run(
+            rows, runs_per_type=fp_runs, epochs=fp_epochs)),
         ("tuning", lambda rows: bench_tuning.run(
             rows, n_workloads=n_workloads, hpo_trials=hpo_trials,
             hpo_epochs=hpo_epochs)),
-        ("workflows", lambda rows: bench_workflows.run(rows)),
+        ("workflows", lambda rows: bench_workflows.run(
+            rows, runs_per_type=wf_runs, epochs=wf_epochs)),
+        ("fleet", lambda rows: bench_fleet.run(rows, quick=quick)),
         ("kernels", lambda rows: bench_kernels.run(rows)),
         ("roofline", lambda rows: bench_roofline.run(rows)),
     ]
+    json_out = {"tuning": args.json_out, "fleet": args.fleet_json_out}
 
     rows = [("name", "us_per_call", "derived")]
     for name, fn in modules:
@@ -52,26 +72,31 @@ def main() -> None:
             continue
         start = len(rows)
         t0 = time.time()
+        params = None
         try:
-            fn(rows)
+            params = fn(rows)
             rows.append((f"{name}.wall_s", "", f"{time.time() - t0:.1f}"))
         except Exception as e:  # noqa: BLE001
             traceback.print_exc()
             rows.append((f"{name}.ERROR", "", repr(e)))
-        if name == "tuning" and args.json_out:
+        if name in json_out and json_out[name]:
+            # record the module's actual workload parameters so quick
+            # smoke numbers are never mistaken for the tracked
+            # full-run trajectory (modules may return their own dict)
+            if params is None and name == "tuning":
+                params = {"hpo_trials": hpo_trials,
+                          "hpo_epochs": hpo_epochs,
+                          "n_workloads": n_workloads}
             payload = {
                 "module": name,
                 "unix_time": time.time(),
-                # record the run parameters so quick smoke numbers are
-                # never mistaken for the tracked full-run trajectory
-                "quick": args.quick,
-                "hpo_trials": hpo_trials,
-                "hpo_epochs": hpo_epochs,
-                "n_workloads": n_workloads,
+                "quick": quick,
+                "smoke": args.smoke,
+                "params": params,
                 "rows": [{"name": n, "us_per_call": u, "derived": d}
                          for n, u, d in rows[start:]],
             }
-            with open(args.json_out, "w") as f:
+            with open(json_out[name], "w") as f:
                 json.dump(payload, f, indent=2)
                 f.write("\n")
     for r in rows:
@@ -79,4 +104,8 @@ def main() -> None:
 
 
 if __name__ == "__main__":
+    # support `python benchmarks/run.py` (script dir on sys.path, repo
+    # root not): make the `benchmarks` package importable
+    sys.path.insert(0, os.path.dirname(os.path.dirname(
+        os.path.abspath(__file__))))
     main()

@@ -90,20 +90,21 @@ class GraphStructure:
     t_src: np.ndarray  # (N, P) float64 predecessor timestamp (0 if none)
 
 
-def graph_structure(frame: BenchmarkFrame,
+def chain_structure(key: np.ndarray, t: np.ndarray,
                     p: int = P_PREDECESSORS) -> GraphStructure:
-    n = len(frame)
-    # chain key ordered like the record path: sorted (type name, machine
-    # name) tuples -> ranks of the sorted vocabularies
-    bt_rank = np.argsort(np.argsort(frame.benchmark_types))
-    m_rank = np.argsort(np.argsort(frame.machines))
-    key = (bt_rank[frame.type_code].astype(np.int64)
-           * max(len(frame.machines), 1) + m_rank[frame.machine_code])
+    """Core topology derivation from a per-row chain key + timestamps:
+    each row's P predecessors are the immediately preceding rows of the
+    same chain in stable (t, row) order. ``graph_structure`` wraps this
+    for frames; the fleet service calls it directly on store-gathered
+    arrays (no intermediate frame)."""
+    n = len(key)
+    key = np.asarray(key, np.int64)
+    t = np.asarray(t, np.float64)
     chain = np.unique(key, return_inverse=True)[1].astype(np.int32)
 
     # stable (chain, t, row) order; the record path sorts chains by key
     # and chain members chronologically with stable ties
-    order = np.lexsort((np.arange(n), frame.t, key))
+    order = np.lexsort((np.arange(n), t, key))
     key_sorted = key[order]
     boundary = np.ones(n, bool)
     boundary[1:] = key_sorted[1:] != key_sorted[:-1]
@@ -121,10 +122,21 @@ def graph_structure(frame: BenchmarkFrame,
         rows = order[valid]
         nbr[rows, q] = j[valid]
         jj = j[valid]
-        dt[rows, q] = np.maximum(frame.t[rows] - frame.t[jj], 0.0)
-        t_src[rows, q] = frame.t[jj]
+        dt[rows, q] = np.maximum(t[rows] - t[jj], 0.0)
+        t_src[rows, q] = t[jj]
     return GraphStructure(nbr=nbr, nbr_mask=nbr >= 0, chain=chain,
                           dt=dt, t_src=t_src)
+
+
+def graph_structure(frame: BenchmarkFrame,
+                    p: int = P_PREDECESSORS) -> GraphStructure:
+    # chain key ordered like the record path: sorted (type name, machine
+    # name) tuples -> ranks of the sorted vocabularies
+    bt_rank = np.argsort(np.argsort(frame.benchmark_types))
+    m_rank = np.argsort(np.argsort(frame.machines))
+    key = (bt_rank[frame.type_code].astype(np.int64)
+           * max(len(frame.machines), 1) + m_rank[frame.machine_code])
+    return chain_structure(key, frame.t, p)
 
 
 def build_graphs(data: FrameOrRecords,

@@ -188,6 +188,37 @@ def concat_frames(frames: Sequence[BenchmarkFrame]) -> BenchmarkFrame:
     machines, mlut = _remap_vocab(f.machines for f in frames)
     mtypes, tlut = _remap_vocab(f.machine_types for f in frames)
 
+    first = frames[0]
+    if all(f.metric_names == first.metric_names
+           and f.metric_units == first.metric_units
+           and f.node_metric_names == first.node_metric_names
+           for f in frames[1:]):
+        # fast path (the fleet store's append cadence): identical
+        # column layout -> plain row concatenation, only vocabulary
+        # codes need remapping
+        return BenchmarkFrame(
+            benchmark_types=btypes, machines=machines,
+            machine_types=mtypes,
+            metric_names=first.metric_names,
+            metric_units=first.metric_units,
+            node_metric_names=first.node_metric_names,
+            type_code=np.concatenate(
+                [bl[f.type_code] for f, bl in zip(frames, blut)]),
+            machine_code=np.concatenate(
+                [ml[f.machine_code] for f, ml in zip(frames, mlut)]),
+            machine_type_code=np.concatenate(
+                [tl[f.machine_type_code]
+                 for f, tl in zip(frames, tlut)]),
+            t=np.concatenate([f.t for f in frames]),
+            stressed=np.concatenate([f.stressed for f in frames]),
+            metrics=np.concatenate([f.metrics for f in frames]),
+            metrics_present=np.concatenate(
+                [f.metrics_present for f in frames]),
+            node_metrics=np.concatenate(
+                [f.node_metrics for f in frames]),
+            node_metrics_present=np.concatenate(
+                [f.node_metrics_present for f in frames]))
+
     cols: List[Tuple[str, str]] = []
     cseen: Dict[Tuple[str, str], int] = {}
     ncols: List[str] = []

@@ -63,10 +63,12 @@ class SuiteRunner:
     def run_frame(self, machines: Dict[str, str], runs_per_type: int,
                   stress_fraction: float = 0.0,
                   degraded_machines: Optional[Sequence[str]] = None,
-                  ) -> BenchmarkFrame:
+                  t_offset: float = 0.0) -> BenchmarkFrame:
         """Columnar acquisition. ``machines``: {node_name: machine_type}.
         ``degraded_machines`` are permanently degraded (every run
-        stressed) — used by the runtime watchdog tests."""
+        stressed) — used by the runtime watchdog tests. ``t_offset``
+        shifts every timestamp (streaming re-fingerprinting rounds
+        happen *after* the history they are scored against)."""
         degraded = set(degraded_machines or ())
         node_names = list(machines)
         mtype_vocab = list(dict.fromkeys(machines.values()))
@@ -170,6 +172,8 @@ class SuiteRunner:
             metrics=metrics, metrics_present=present,
             node_metrics=nmetrics,
             node_metrics_present=np.ones_like(nmetrics, bool))
+        if t_offset:
+            frame.t += t_offset
         return frame.sort_by_time()
 
     # ----------------------------------------------------- record wrapper

@@ -1,0 +1,23 @@
+"""Fleet-scale fingerprint service (paper §III-C at fleet traffic).
+
+- ``store``   — append-only columnar :class:`FingerprintStore` with
+  per-(node x benchmark type) time-windowed views and .npz durability;
+- ``shard``   — :class:`ShardedScorer`, shard_map'd scoring across a
+  1-D device mesh reusing the engine's pure score function;
+- ``service`` — :class:`FleetScoringService`, micro-batched request
+  queue dispatching one sharded call per shape bucket;
+- ``drift``   — store-backed per-node / per-aspect EWMA degradation
+  analytics consumed by ``runtime.watchdog.PeronaWatchdog``.
+"""
+
+from repro.fleet.drift import (NodeDrift, degrading_nodes, drift_report,
+                               ewma_series)
+from repro.fleet.service import FleetResult, FleetScoringService
+from repro.fleet.shard import ShardedScorer
+from repro.fleet.store import FingerprintStore
+
+__all__ = [
+    "FingerprintStore", "ShardedScorer", "FleetScoringService",
+    "FleetResult", "NodeDrift", "drift_report", "degrading_nodes",
+    "ewma_series",
+]

@@ -1,0 +1,136 @@
+"""Store-backed degradation analytics (paper §III-C / §III-D).
+
+Perona's context-aware scoring flags single anomalous executions; what
+an operator acts on is the *trend*: is a node's anomaly probability
+drifting up round over round, and on which resource aspect? This
+module derives exactly that from the :class:`FingerprintStore` — a
+per-node EWMA over the chronological series of attached anomaly
+scores, and per-(node x aspect) EWMAs over the §III-D code quality
+scores (``core.ranking.code_scores``, aspects via ``ASPECT_OF_TYPE``)
+— replacing the watchdog's ad-hoc frame-history bookkeeping with a
+queryable analytics layer over durable history.
+
+Only rows with attached scores participate (NaN = never scored);
+series are ordered by (t, row id), matching the store's view order.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional
+
+import numpy as np
+
+from repro.core.ranking import ASPECT_OF_TYPE, code_scores
+from repro.fleet.store import FingerprintStore
+
+
+def ewma_series(x: np.ndarray, alpha: float) -> np.ndarray:
+    """Full exponentially-weighted moving average series:
+    e_0 = x_0, e_i = (1-alpha) * e_{i-1} + alpha * x_i."""
+    x = np.asarray(x, np.float64)
+    out = np.empty_like(x)
+    if len(x) == 0:
+        return out
+    acc = x[0]
+    for i, v in enumerate(x):
+        acc = (1.0 - alpha) * acc + alpha * v
+        out[i] = acc
+    out[0] = x[0]
+    return out
+
+
+def ewma_last(x: np.ndarray, alpha: float) -> float:
+    """Final EWMA value (the fold of :func:`ewma_series`, without
+    materializing the series)."""
+    acc = float(x[0])
+    for v in x[1:]:
+        acc = (1.0 - alpha) * acc + alpha * float(v)
+    return acc
+
+
+@dataclasses.dataclass
+class NodeDrift:
+    """Degradation summary of one node over its stored history."""
+
+    node: str
+    n_scored: int
+    anomaly_ewma: float  # current EWMA of anomaly probability
+    anomaly_mean: float  # lifetime mean (drift baseline)
+    aspect_ewma: Dict[str, float]  # cpu/memory/disk/network quality
+    aspect_mean: Dict[str, float]
+    last_t: float
+
+    @property
+    def drift(self) -> float:
+        """EWMA minus lifetime mean: > 0 means anomaly probability is
+        trending above the node's own baseline."""
+        return self.anomaly_ewma - self.anomaly_mean
+
+    def degraded_aspects(self, rel_drop: float = 0.2) -> Dict[str, float]:
+        """Aspects whose current quality EWMA dropped at least
+        ``rel_drop`` (fraction) below the lifetime mean."""
+        out = {}
+        for a, e in self.aspect_ewma.items():
+            m = self.aspect_mean[a]
+            if m > 0 and (m - e) / m >= rel_drop:
+                out[a] = (m - e) / m
+        return out
+
+
+def drift_report(store: FingerprintStore, alpha: float = 0.3,
+                 node: Optional[str] = None) -> Dict[str, NodeDrift]:
+    """Per-node drift summaries over the stored, scored history."""
+    frame = store.frame
+    if frame is None:
+        return {}
+    anomaly = store.anomaly
+    scored = ~np.isnan(anomaly)
+    codes = store.codes
+    has_codes = (np.zeros(len(frame), bool) if codes is None
+                 else ~np.isnan(codes).any(axis=1))
+    # quality scores only where codes were attached (never-scored rows
+    # are filtered out anyway — don't pay code_scores for them)
+    quality = np.full(len(frame), np.nan)
+    coded_rows = np.nonzero(has_codes)[0]
+    if len(coded_rows):
+        quality[coded_rows] = code_scores(codes[coded_rows])
+    aspect_of_code = {b: ASPECT_OF_TYPE.get(name)
+                      for b, name in enumerate(frame.benchmark_types)}
+
+    out: Dict[str, NodeDrift] = {}
+    for m_code in np.unique(frame.machine_code[scored]):
+        name = frame.machines[m_code]
+        if node is not None and name != node:
+            continue
+        sel = np.nonzero((frame.machine_code == m_code) & scored)[0]
+        sel = sel[np.lexsort((store.row_id[sel], frame.t[sel]))]
+        series = anomaly[sel].astype(np.float64)
+        aspect_ewma: Dict[str, float] = {}
+        aspect_mean: Dict[str, float] = {}
+        with_codes = sel[has_codes[sel]]
+        if len(with_codes):
+            aspects = np.asarray(
+                [aspect_of_code[b] or ""
+                 for b in frame.type_code[with_codes]])
+            for a in sorted(set(aspects) - {""}):
+                q = quality[with_codes[aspects == a]]
+                aspect_ewma[a] = ewma_last(q, alpha)
+                aspect_mean[a] = float(q.mean())
+        out[name] = NodeDrift(
+            node=name, n_scored=len(sel),
+            anomaly_ewma=ewma_last(series, alpha),
+            anomaly_mean=float(series.mean()),
+            aspect_ewma=aspect_ewma, aspect_mean=aspect_mean,
+            last_t=float(frame.t[sel[-1]]))
+    return out
+
+
+def degrading_nodes(report: Dict[str, NodeDrift],
+                    ewma_threshold: float = 0.5,
+                    min_scored: int = 3) -> Dict[str, NodeDrift]:
+    """Nodes whose anomaly EWMA currently exceeds the threshold (with
+    at least ``min_scored`` scored executions of history)."""
+    return {n: d for n, d in report.items()
+            if d.n_scored >= min_scored
+            and d.anomaly_ewma >= ewma_threshold}

@@ -1,0 +1,106 @@
+"""Sharded fleet scoring: one compiled dispatch across all devices.
+
+A fleet re-fingerprinting round is a stack of *independent* per-node
+scoring requests (paper §III-C scores each execution only against the
+predecessors of its own (node x benchmark type) chain, so request
+graphs never cross shard boundaries). ``ShardedScorer`` therefore
+partitions the stacked request batch (leading axis R) across a 1-D
+``"fleet"`` device mesh with ``jax.experimental.shard_map`` and runs
+the *same* pure scoring function as ``serving.FingerprintEngine``
+(``make_score_fn``) vmapped over each device's local requests — one
+jit-compiled, donation-enabled dispatch per flush, scaling with device
+count.
+
+Verifiable on CPU: run under
+``XLA_FLAGS=--xla_force_host_platform_device_count=8`` and compare
+against a single-device scorer — the partitioning is along the request
+axis only, so the sharded scores are bit-identical
+(``tests/test_fleet.py``).
+"""
+
+from __future__ import annotations
+
+from typing import Dict, List, Optional, Sequence
+
+import numpy as np
+
+from repro.common.bucketing import next_pow2
+from repro.core.model import PeronaModel
+from repro.core.preprocess import Preprocessor
+from repro.serving.engine import ARG_NAMES, make_score_fn
+
+
+def _pow2_devices(devices: Sequence) -> List:
+    """Largest power-of-two prefix of the device list (keeps the padded
+    pow2 request axis divisible by the mesh size)."""
+    n = 1
+    while n * 2 <= len(devices):
+        n *= 2
+    return list(devices[:n])
+
+
+class ShardedScorer:
+    """shard_map(vmap(score_fn)) over a 1-D device mesh."""
+
+    def __init__(self, model: PeronaModel, preproc: Preprocessor,
+                 devices: Optional[Sequence] = None):
+        import jax
+        from jax.sharding import Mesh, PartitionSpec as P
+        try:  # stable API (newer jax)
+            from jax import shard_map
+        except ImportError:  # jax <= 0.4/0.5
+            from jax.experimental.shard_map import shard_map
+
+        devices = _pow2_devices(devices if devices is not None
+                                else jax.devices())
+        self.mesh = Mesh(np.asarray(devices), ("fleet",))
+        self.n_devices = len(devices)
+        self._trace_count = 0
+
+        def on_trace():
+            self._trace_count += 1
+
+        fn = make_score_fn(model, preproc, on_trace=on_trace)
+        vmapped = jax.vmap(fn, in_axes=(None,) + (0,) * len(ARG_NAMES))
+        specs = dict(mesh=self.mesh,
+                     in_specs=(P(),) + (P("fleet"),) * len(ARG_NAMES),
+                     out_specs=P("fleet"))
+        try:
+            sharded = shard_map(vmapped, check_rep=False, **specs)
+        except TypeError:  # newer jax dropped/renamed check_rep
+            sharded = shard_map(vmapped, **specs)
+        # stacked request buffers are rebuilt per flush: donate them
+        self.donate_argnums = tuple(range(1, 1 + len(ARG_NAMES)))
+        self._call = jax.jit(sharded,
+                             donate_argnums=self.donate_argnums)
+
+    @property
+    def trace_count(self) -> int:
+        """jit tracings so far (1 per distinct (R, bucket) shape)."""
+        return self._trace_count
+
+    def pad_requests(self, n_requests: int) -> int:
+        """Power-of-two request-axis size, divisible by the mesh."""
+        return next_pow2(n_requests, self.n_devices)
+
+    def score_stack(self, params, stack: Dict[str, np.ndarray]
+                    ) -> Dict[str, np.ndarray]:
+        """Score a stacked request batch: every array in ``stack`` has
+        leading axis R (a multiple of the device count; see
+        :meth:`pad_requests`) then the per-request padded row bucket.
+        Returns numpy outputs with the same leading axes."""
+        import jax.numpy as jnp
+
+        from repro.serving.engine import silence_unusable_donation
+
+        r = stack[ARG_NAMES[0]].shape[0]
+        if r % self.n_devices:
+            raise ValueError(
+                f"request axis {r} not divisible by the "
+                f"{self.n_devices}-device fleet mesh; pad with "
+                "pad_requests() first")
+        with silence_unusable_donation():
+            out = self._call(params,
+                             *(jnp.asarray(stack[k])
+                               for k in ARG_NAMES))
+        return {k: np.asarray(v) for k, v in out.items()}

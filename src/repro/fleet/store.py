@@ -1,0 +1,381 @@
+"""Append-only columnar fingerprint store (paper §III-C context).
+
+Perona scores a new benchmark execution *against the history of
+previous executions of the same node*; Karasu extends that history to
+profiling data shared across users. Both need a durable, queryable
+store whose context-assembly path is cheap at fleet traffic rates.
+
+``FingerprintStore`` keeps executions as :class:`BenchmarkFrame`
+chunks (consolidated lazily into one columnar frame), parallel
+per-row arrays for global row ids and attached scores (anomaly
+probability + fingerprint codes, NaN until scored), and an optional
+per-row *feature cache* (the §III-B preprocessed columns produced by
+``serving.engine.prepare_features``) so the fleet service never re-runs
+Python-side preprocessing for context rows.
+
+Views are pure array gathers: one lexsort over (machine, benchmark
+type, t, row) yields contiguous per-chain index ranges, so
+``view(node, benchmark_type, t_min=..., newest_per_chain=...)`` is a
+slice + ``searchsorted`` per chain — no Python record filtering.
+``save``/``load`` round-trip the whole store through one ``.npz`` file
+for durability.
+
+Scalability note: appends are O(chunk) until the next read, but the
+lazy consolidation + index rebuild each touch the whole store, so an
+append-read cadence (one flush per round) costs O(total rows) per
+round. Owners that compact (the watchdog) are bounded; a never-
+compacted fleet store grows linearly per flush — amortized growable
+column buffers + incremental index merge are the known follow-up
+(see ROADMAP).
+"""
+
+from __future__ import annotations
+
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+from repro.fingerprint.frame import (BenchmarkFrame, FrameOrRecords,
+                                     as_frame, concat_frames)
+
+FEATURE_KEYS = ("raw", "present", "type_ids", "edge_raw")
+
+
+class FingerprintStore:
+    """Append-only columnar store of scored benchmark executions."""
+
+    def __init__(self):
+        self._frame: Optional[BenchmarkFrame] = None
+        self._row_id = np.zeros(0, np.int64)
+        self._anomaly = np.zeros(0, np.float32)
+        self._codes: Optional[np.ndarray] = None  # (N, K) once attached
+        self._features: Optional[Dict[str, np.ndarray]] = None
+        self._pending: List[dict] = []
+        self._has_features: Optional[bool] = None  # set on first append
+        self._next_id = 0
+        self._index = None  # (order, {(m_code, b_code): (start, end)})
+
+    # ------------------------------------------------------------- basics
+    def __len__(self) -> int:
+        n = 0 if self._frame is None else len(self._frame)
+        return n + sum(len(c["frame"]) for c in self._pending)
+
+    @property
+    def frame(self) -> Optional[BenchmarkFrame]:
+        """The consolidated columnar frame (None while empty)."""
+        self._consolidate()
+        return self._frame
+
+    @property
+    def row_id(self) -> np.ndarray:
+        """(N,) monotonically increasing global row ids (append order);
+        ids survive :meth:`compact`."""
+        self._consolidate()
+        return self._row_id
+
+    @property
+    def anomaly(self) -> np.ndarray:
+        """(N,) attached anomaly probabilities (NaN until scored)."""
+        self._consolidate()
+        return self._anomaly
+
+    @property
+    def codes(self) -> Optional[np.ndarray]:
+        """(N, K) attached fingerprint codes (NaN rows until scored)."""
+        self._consolidate()
+        return self._codes
+
+    @property
+    def features(self) -> Optional[Dict[str, np.ndarray]]:
+        """Cached per-row preprocessed columns (see FEATURE_KEYS)."""
+        self._consolidate()
+        return self._features
+
+    # ------------------------------------------------------------- append
+    def append(self, data: FrameOrRecords,
+               features: Optional[Dict[str, np.ndarray]] = None,
+               anomaly: Optional[np.ndarray] = None,
+               codes: Optional[np.ndarray] = None) -> int:
+        """Append one chunk of executions; returns the first global row
+        id of the chunk (ids are contiguous per chunk)."""
+        frame = as_frame(data)
+        n = len(frame)
+        if n == 0:
+            return self._next_id
+        if self._has_features is None:
+            self._has_features = features is not None
+        elif self._has_features != (features is not None):
+            raise ValueError(
+                "cannot mix feature-cached and plain appends: the "
+                "store either caches features for every row or none")
+        first = self._next_id
+        anom = (np.full(n, np.nan, np.float32) if anomaly is None
+                else np.asarray(anomaly, np.float32))
+        self._pending.append({
+            "frame": frame,
+            "row_id": np.arange(first, first + n, dtype=np.int64),
+            "anomaly": anom,
+            "codes": None if codes is None else np.asarray(codes,
+                                                           np.float32),
+            "features": features,
+        })
+        self._next_id += n
+        self._index = None
+        return first
+
+    def _codes_like(self, n: int, k: int) -> np.ndarray:
+        return np.full((n, k), np.nan, np.float32)
+
+    def _consolidate(self) -> None:
+        if not self._pending:
+            return
+        chunks = self._pending
+        self._pending = []
+        frames = ([] if self._frame is None else [self._frame])
+        frames += [c["frame"] for c in chunks]
+        self._frame = concat_frames(frames)
+        self._row_id = np.concatenate(
+            [self._row_id] + [c["row_id"] for c in chunks])
+        self._anomaly = np.concatenate(
+            [self._anomaly] + [c["anomaly"] for c in chunks])
+        # codes: adopt K from the first scored chunk, NaN-fill the rest
+        ks = [c["codes"].shape[1] for c in chunks
+              if c["codes"] is not None]
+        k = self._codes.shape[1] if self._codes is not None else (
+            ks[0] if ks else None)
+        if k is not None:
+            parts = [self._codes if self._codes is not None
+                     else self._codes_like(len(self._row_id)
+                                           - sum(len(c["frame"])
+                                                 for c in chunks), k)]
+            for c in chunks:
+                parts.append(c["codes"] if c["codes"] is not None
+                             else self._codes_like(len(c["frame"]), k))
+            self._codes = np.concatenate(parts)
+        if any(c["features"] is not None for c in chunks):
+            feats = self._features
+            for c in chunks:
+                f = c["features"]
+                if feats is None:
+                    feats = {key: np.asarray(f[key])
+                             for key in FEATURE_KEYS}
+                else:
+                    feats = {key: np.concatenate(
+                        [feats[key], np.asarray(f[key])])
+                        for key in FEATURE_KEYS}
+            self._features = feats
+        self._index = None
+
+    # ------------------------------------------------------------ scoring
+    def attach(self, idx: np.ndarray, anomaly: np.ndarray,
+               codes: Optional[np.ndarray] = None) -> None:
+        """Attach scores to rows (by current row *index*, not id)."""
+        self._consolidate()
+        idx = np.asarray(idx)
+        self._anomaly[idx] = np.asarray(anomaly, np.float32)
+        if codes is not None:
+            codes = np.asarray(codes, np.float32)
+            if self._codes is None:
+                self._codes = self._codes_like(len(self._row_id),
+                                               codes.shape[1])
+            self._codes[idx] = codes
+
+    # -------------------------------------------------------------- views
+    def _ensure_index(self):
+        self._consolidate()
+        if self._index is not None or self._frame is None:
+            return
+        f = self._frame
+        n = len(f)
+        n_types = max(len(f.benchmark_types), 1)
+        key = f.machine_code.astype(np.int64) * n_types + f.type_code
+        order = np.lexsort((np.arange(n), f.t, key))
+        key_sorted = key[order]
+        boundary = np.ones(n, bool)
+        boundary[1:] = key_sorted[1:] != key_sorted[:-1]
+        starts = np.where(boundary)[0]
+        ends = np.append(starts[1:], n)
+        # chains grouped per machine so view(node) touches only that
+        # node's chain ranges
+        chains: Dict[int, List[Tuple[int, int, int]]] = {}
+        for s, e in zip(starts, ends):
+            k = int(key_sorted[s])
+            chains.setdefault(k // n_types, []).append(
+                (k % n_types, int(s), int(e)))
+        self._index = (order, chains)
+
+    def _code_of(self, vocab: Tuple[str, ...], name: Optional[str]):
+        if name is None:
+            return None
+        try:
+            return vocab.index(name)
+        except ValueError:
+            return -1  # unknown name -> empty view
+
+    def view(self, node: Optional[str] = None,
+             benchmark_type: Optional[str] = None, *,
+             t_min: Optional[float] = None,
+             t_max: Optional[float] = None,
+             before_id: Optional[int] = None,
+             newest_per_chain: Optional[int] = None) -> np.ndarray:
+        """Row indices (chronological, stable) of the selected
+        executions: per-(node x benchmark type) chains filtered to a
+        time window and/or rows appended before a given global row id
+        (``before_id``, applied before the per-chain ``newest`` cap —
+        "history as of that append") and/or the newest K rows per
+        chain. Pure array gather — one slice + searchsorted/mask per
+        selected chain."""
+        self._ensure_index()
+        if self._frame is None:
+            return np.zeros(0, np.int64)
+        f = self._frame
+        order, chains = self._index
+        m_code = self._code_of(f.machines, node)
+        b_code = self._code_of(f.benchmark_types, benchmark_type)
+        if m_code == -1 or b_code == -1:
+            return np.zeros(0, np.int64)
+        if m_code is None:
+            selected = [c for per in chains.values() for c in per]
+        else:
+            selected = chains.get(m_code, [])
+        parts = []
+        for bc, s, e in selected:
+            if b_code is not None and bc != b_code:
+                continue
+            rows = order[s:e]
+            if t_min is not None or t_max is not None:
+                ts = f.t[rows]
+                lo = 0 if t_min is None else int(
+                    np.searchsorted(ts, t_min, "left"))
+                hi = len(rows) if t_max is None else int(
+                    np.searchsorted(ts, t_max, "right"))
+                rows = rows[lo:hi]
+            if before_id is not None:
+                rows = rows[self._row_id[rows] < before_id]
+            if newest_per_chain is not None:
+                rows = rows[max(len(rows) - newest_per_chain, 0):]
+            parts.append(rows)
+        if not parts:
+            return np.zeros(0, np.int64)
+        sel = np.concatenate(parts)
+        return sel[np.lexsort((sel, f.t[sel]))]
+
+    def context(self, node: str, per_chain: int) -> np.ndarray:
+        """Scoring context for ``node``: the newest ``per_chain`` rows
+        of each of its benchmark-type chains, chronological."""
+        return self.view(node, newest_per_chain=per_chain)
+
+    def context_with_new(self, first_id: int, per_chain: int,
+                         node: Optional[str] = None
+                         ) -> Tuple[np.ndarray, np.ndarray]:
+        """THE scoring-context rule shared by the fleet service, the
+        watchdog and the benchmarks: for rows appended at or after
+        ``first_id`` ("the round"), assemble the newest ``per_chain``
+        rows of every chain *as of before the round* plus every new
+        row (of ``node`` only, when given), in chronological (t, row)
+        order. Returns (row indices, is-new mask)."""
+        self._consolidate()
+        if self._frame is None:
+            return np.zeros(0, np.int64), np.zeros(0, bool)
+        ctx = self.view(node, before_id=first_id,
+                        newest_per_chain=per_chain)
+        new = np.nonzero(self._row_id >= first_id)[0]
+        if node is not None:
+            m_code = self._code_of(self._frame.machines, node)
+            new = new[self._frame.machine_code[new] == m_code]
+        idx = np.concatenate([ctx, new])
+        idx = idx[np.lexsort((idx, self._frame.t[idx]))]
+        return idx, self._row_id[idx] >= first_id
+
+    # ------------------------------------------------------------ compact
+    def _select_inplace(self, idx: np.ndarray) -> None:
+        self._frame = self._frame.select(idx)
+        self._row_id = self._row_id[idx]
+        self._anomaly = self._anomaly[idx]
+        if self._codes is not None:
+            self._codes = self._codes[idx]
+        if self._features is not None:
+            self._features = {k: v[idx]
+                              for k, v in self._features.items()}
+        self._index = None
+
+    def compact(self, per_chain: int) -> None:
+        """Drop all but the newest ``per_chain`` rows of every chain
+        (row ids are preserved). Bounds memory for long-running owners
+        like the watchdog; the fleet service keeps the full history."""
+        self._consolidate()
+        if self._frame is None:
+            return
+        self._select_inplace(self.view(newest_per_chain=per_chain))
+
+    def clear(self) -> None:
+        self.__init__()
+
+    # ---------------------------------------------------------- save/load
+    def save(self, path: str) -> None:
+        """Durable one-file snapshot (compressed .npz)."""
+        self._consolidate()
+        f = self._frame
+        if f is None:
+            np.savez_compressed(path, empty=np.asarray(True),
+                                next_id=np.asarray(self._next_id))
+            return
+        payload = {
+            "empty": np.asarray(False),
+            "next_id": np.asarray(self._next_id),
+            "benchmark_types": np.asarray(f.benchmark_types),
+            "machines": np.asarray(f.machines),
+            "machine_types": np.asarray(f.machine_types),
+            "metric_names": np.asarray(f.metric_names),
+            "metric_units": np.asarray(f.metric_units),
+            "node_metric_names": np.asarray(f.node_metric_names),
+            "type_code": f.type_code, "machine_code": f.machine_code,
+            "machine_type_code": f.machine_type_code,
+            "t": f.t, "stressed": f.stressed,
+            "metrics": f.metrics, "metrics_present": f.metrics_present,
+            "node_metrics": f.node_metrics,
+            "node_metrics_present": f.node_metrics_present,
+            "row_id": self._row_id, "anomaly": self._anomaly,
+        }
+        if self._codes is not None:
+            payload["codes"] = self._codes
+        if self._features is not None:
+            for k in FEATURE_KEYS:
+                payload[f"feat_{k}"] = self._features[k]
+        np.savez_compressed(path, **payload)
+
+    @classmethod
+    def load(cls, path: str) -> "FingerprintStore":
+        with np.load(path, allow_pickle=False) as z:
+            store = cls()
+            store._next_id = int(z["next_id"])
+            if bool(z["empty"]):
+                return store
+
+            def names(key):
+                return tuple(str(x) for x in z[key])
+
+            store._frame = BenchmarkFrame(
+                benchmark_types=names("benchmark_types"),
+                machines=names("machines"),
+                machine_types=names("machine_types"),
+                metric_names=names("metric_names"),
+                metric_units=names("metric_units"),
+                node_metric_names=names("node_metric_names"),
+                type_code=z["type_code"],
+                machine_code=z["machine_code"],
+                machine_type_code=z["machine_type_code"],
+                t=z["t"], stressed=z["stressed"],
+                metrics=z["metrics"],
+                metrics_present=z["metrics_present"],
+                node_metrics=z["node_metrics"],
+                node_metrics_present=z["node_metrics_present"])
+            store._row_id = z["row_id"]
+            store._anomaly = z["anomaly"]
+            if "codes" in z.files:
+                store._codes = z["codes"]
+            if f"feat_{FEATURE_KEYS[0]}" in z.files:
+                store._features = {k: z[f"feat_{k}"]
+                                   for k in FEATURE_KEYS}
+            store._has_features = store._features is not None
+            return store

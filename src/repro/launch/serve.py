@@ -11,12 +11,25 @@ what the decode_32k / long_500k dry-run cells lower onto the production
 meshes.
 
 ``--fingerprint`` serves Perona fingerprint scoring instead: rounds of
-benchmark executions stream through the shared
-:class:`repro.serving.FingerprintEngine` (the same shape-bucketed jit
-call the runtime watchdog uses), amortizing one compile across rounds:
+benchmark executions stream through one shared
+:class:`repro.fleet.FleetScoringService` — the watchdog submits
+per-node requests, the service coalesces them into shape-bucketed
+micro-batches and dispatches one sharded call per flush (the same
+scoring path `--fleet` exercises), amortizing one compile across
+rounds:
 
     PYTHONPATH=src python -m repro.launch.serve --fingerprint \
         --rounds 20
+
+``--fleet`` runs the raw fleet service loop (no watchdog): per-node
+requests are queued and flushed in micro-batches, and the run reports
+requests/s, dispatch counts and the store-backed drift summary. Pair
+with ``XLA_FLAGS=--xla_force_host_platform_device_count=8`` to see the
+request batch sharded across 8 virtual CPU devices:
+
+    XLA_FLAGS=--xla_force_host_platform_device_count=8 \
+        PYTHONPATH=src python -m repro.launch.serve --fleet \
+        --nodes 16 --rounds 10
 """
 
 from __future__ import annotations
@@ -134,22 +147,17 @@ def merge_cache_slot(cache_old, cache_new, slot: int):
     return out
 
 
-def serve_fingerprints(rounds: int, runs_per_type: int = 2,
-                       seed: int = 0) -> dict:
-    """Fingerprint-scoring service loop: train a small Perona model,
-    then stream scoring rounds through the shared FingerprintEngine
-    (one compile amortized over all rounds)."""
+def _trained_perona(machines, runs_per_type: int, seed: int):
+    """Acquire + fit + train one small Perona model for the serving
+    loops (shared by --fingerprint and --fleet)."""
     from repro.core.graph_data import build_graphs
     from repro.core.model import PeronaConfig, PeronaModel
     from repro.core.preprocess import Preprocessor
     from repro.core.trainer import train_perona
     from repro.fingerprint.runner import SuiteRunner
-    from repro.runtime.watchdog import PeronaWatchdog
-    from repro.serving.engine import FingerprintEngine
 
     runner = SuiteRunner(seed=seed)
-    machines = {f"serve-{i}": "e2-medium" for i in range(3)}
-    frame = runner.run_frame(machines, runs_per_type=40,
+    frame = runner.run_frame(machines, runs_per_type=runs_per_type,
                              stress_fraction=0.2)
     pre = Preprocessor().fit(frame)
     batch = build_graphs(frame, pre)
@@ -157,22 +165,68 @@ def serve_fingerprints(rounds: int, runs_per_type: int = 2,
                        edge_dim=batch.edge.shape[-1])
     model = PeronaModel(cfg)
     res = train_perona(model, batch, epochs=40, seed=seed)
+    return runner, frame, pre, model, res.params
 
-    engine = FingerprintEngine(model, res.params, pre)
-    wd = PeronaWatchdog(model, res.params, pre, engine=engine,
+
+def serve_fingerprints(rounds: int, runs_per_type: int = 2,
+                       seed: int = 0) -> dict:
+    """Fingerprint-scoring service loop: train a small Perona model,
+    then stream watchdog rounds through one FleetScoringService (the
+    watchdog and the fleet entrypoint share this scoring path)."""
+    from repro.fleet import FleetScoringService
+    from repro.runtime.watchdog import PeronaWatchdog
+
+    machines = {f"serve-{i}": "e2-medium" for i in range(3)}
+    runner, frame, pre, model, params = _trained_perona(
+        machines, runs_per_type=40, seed=seed)
+
+    service = FleetScoringService(model, params, pre,
+                                  context_per_chain=40)
+    wd = PeronaWatchdog(model, params, pre, service=service,
                         history_per_chain=40)
     wd.history = frame
     t0 = time.time()
     scored = 0
-    for _ in range(rounds):
+    for k in range(rounds):
         round_frame = runner.run_frame(machines,
-                                       runs_per_type=runs_per_type)
+                                       runs_per_type=runs_per_type,
+                                       t_offset=(k + 1) * 86400.0)
         wd.observe(round_frame)
         scored += len(round_frame)
     dt = time.time() - t0
     return {"rounds": rounds, "scored": scored, "seconds": dt,
-            "traces": engine.trace_count,
+            "traces": service.trace_count,
+            "stats": service.stats,
             "excluded": wd.excluded_nodes()}
+
+
+def serve_fleet(nodes: int = 16, rounds: int = 10,
+                runs_per_type: int = 1, seed: int = 0) -> dict:
+    """Raw fleet-service loop: per-node requests micro-batched through
+    the sharded scoring path, with store-backed drift analytics."""
+    from repro.fleet import FleetScoringService, drift_report
+
+    machines = {f"fleet-{i}": "e2-medium" for i in range(nodes)}
+    runner, frame, pre, model, params = _trained_perona(
+        machines, runs_per_type=10, seed=seed)
+
+    service = FleetScoringService(model, params, pre,
+                                  context_per_chain=16)
+    service.seed_history(frame)
+    t0 = time.time()
+    for k in range(rounds):
+        round_frame = runner.run_frame(machines,
+                                       runs_per_type=runs_per_type,
+                                       t_offset=(k + 1) * 86400.0)
+        service.score_round(round_frame)
+    dt = time.time() - t0
+    report = drift_report(service.store)
+    worst = max(report.values(), key=lambda d: d.anomaly_ewma,
+                default=None)
+    return {"rounds": rounds, "seconds": dt, "stats": service.stats,
+            "drift_nodes": len(report),
+            "worst_node": None if worst is None else
+            (worst.node, round(worst.anomaly_ewma, 3))}
 
 
 def main() -> None:
@@ -186,6 +240,11 @@ def main() -> None:
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--fingerprint", action="store_true",
                     help="serve Perona fingerprint scoring rounds")
+    ap.add_argument("--fleet", action="store_true",
+                    help="raw fleet service loop (micro-batched, "
+                         "sharded scoring + drift report)")
+    ap.add_argument("--nodes", type=int, default=16,
+                    help="fleet size for --fleet")
     ap.add_argument("--rounds", type=int, default=10)
     args = ap.parse_args()
 
@@ -195,6 +254,18 @@ def main() -> None:
               f"executions, {out['seconds']:.2f}s "
               f"({out['scored'] / max(out['seconds'], 1e-9):.0f} exec/s), "
               f"{out['traces']} compiles, excluded={out['excluded']}")
+        return
+
+    if args.fleet:
+        out = serve_fleet(args.nodes, args.rounds, seed=args.seed)
+        s = out["stats"]
+        print(f"[serve-fleet] {out['rounds']} rounds, "
+              f"{s['requests_served']} requests, {s['rows_scored']} "
+              f"rows, {s['dispatches']} dispatches on {s['devices']} "
+              f"device(s), {s['traces']} compiles, "
+              f"{s['requests_per_s']:.0f} req/s; "
+              f"drift tracked for {out['drift_nodes']} nodes, "
+              f"worst={out['worst_node']}")
         return
 
     cfg = get_config(args.arch)

@@ -7,12 +7,23 @@ paper's discussion of false positives, a flag is only *confirmed* after
 ``confirm_runs`` consecutive anomalous re-benchmarks — a cheap operation
 (each benchmark runs seconds) relative to excluding a healthy node.
 
-The rolling history is held as a columnar :class:`BenchmarkFrame` and
-scored through the shared :class:`FingerprintEngine`, so repeated
-rounds amortize a single compiled scoring call (shape-bucketed jit)
-instead of re-tracing the model every round. A node is flagged in a
-round only when a *quorum* of its new executions scores anomalous —
-one noisy run cannot flag a healthy node (the seed used the max
+The rolling history lives in a :class:`repro.fleet.FingerprintStore`
+(compacted to ``history_per_chain`` rows per (node x benchmark type)
+chain after every round when the watchdog owns the store; a shared
+service store stays append-only), and the scored rounds feed the
+store-backed
+drift analytics of :mod:`repro.fleet.drift` — ``drift_report()``
+exposes per-node / per-aspect EWMAs over the scored history, and each
+decision carries the node's current anomaly EWMA.
+
+Scoring goes through one of two interchangeable paths: the shared
+:class:`FingerprintEngine` (one shape-bucketed jit call over the whole
+history frame — the default, amortizing a single compile across
+rounds), or a :class:`repro.fleet.FleetScoringService` when one is
+passed — then the watchdog and the fleet serve entrypoint share one
+micro-batched, sharded scoring path *and* one store. A node is flagged
+in a round only when a *quorum* of its new executions scores anomalous
+— one noisy run cannot flag a healthy node (the seed used the max
 probability, which false-positived healthy nodes into exclusion) —
 strikes reset on clean rounds, and only confirmed flags
 (``confirm_runs`` consecutive anomalous rounds) exclude a node.
@@ -21,15 +32,17 @@ strikes reset on clean rounds, and only confirmed flags
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Optional, Sequence
+from typing import Dict, List, Optional
 
 import numpy as np
 
 from repro.core.model import PeronaModel
 from repro.core.preprocess import Preprocessor
 from repro.fingerprint.frame import (BenchmarkFrame, FrameOrRecords,
-                                     as_frame, concat_frames)
+                                     as_frame)
 from repro.fingerprint.records import BenchmarkExecution
+from repro.fleet.drift import drift_report
+from repro.fleet.store import FingerprintStore
 from repro.serving.engine import FingerprintEngine
 
 
@@ -40,6 +53,11 @@ class WatchdogDecision:
     flag_fraction: float  # share of the round's executions >= threshold
     flagged: bool
     confirmed: bool
+    # running EWMA over the rounds *this watchdog* observed (same
+    # recurrence as drift.ewma_series; the full store-backed view —
+    # which on a shared store also covers other producers' rounds —
+    # is drift_report())
+    anomaly_ewma: float = float("nan")
 
 
 class PeronaWatchdog:
@@ -47,54 +65,105 @@ class PeronaWatchdog:
                  threshold: float = 0.5, confirm_runs: int = 2,
                  quorum: float = 1 / 3,
                  engine: Optional[FingerprintEngine] = None,
-                 history_per_chain: int = 64):
+                 history_per_chain: int = 64,
+                 service=None, drift_alpha: float = 0.3):
         self.model = model
         self.params = params
         self.preproc = preproc
         self.threshold = threshold
         self.quorum = quorum
         self.confirm_runs = confirm_runs
-        self.history_per_chain = history_per_chain
-        self.engine = engine or FingerprintEngine(model, params, preproc)
+        self.drift_alpha = drift_alpha
+        self.service = service
+        if service is not None:
+            # the service governs scoring context and store lifecycle;
+            # reflect its cap so history_per_chain is never silently
+            # different from what actually bounds the context
+            self.history_per_chain = service.context_per_chain
+            self.engine = engine  # unused unless provided explicitly
+            self.store = service.store
+        else:
+            self.history_per_chain = history_per_chain
+            self.engine = engine or FingerprintEngine(model, params,
+                                                      preproc)
+            self.store = FingerprintStore()
         self._strikes: Dict[str, int] = {}
-        self._frame: Optional[BenchmarkFrame] = None
+        # running per-node anomaly EWMA, updated incrementally with
+        # each round's new scores (O(new rows) per observe; the full
+        # store-backed report stays available via drift_report())
+        self._ewma: Dict[str, float] = {}
 
     # ------------------------------------------------------------- history
     @property
     def history(self) -> List[BenchmarkExecution]:
-        """Rolling context as records (compat view of the frame)."""
-        return [] if self._frame is None else self._frame.to_records()
+        """Rolling context as records (compat view of the store)."""
+        frame = self.store.frame
+        return [] if frame is None else frame.to_records()
 
     @history.setter
     def history(self, data: FrameOrRecords) -> None:
-        self._frame = as_frame(data) if len(data) else None
+        if self.service is not None:
+            # the service's store may hold fleet-wide history owned by
+            # other producers — never wipe it as a side effect
+            if len(self.store):
+                raise ValueError(
+                    "the shared service store already holds history; "
+                    "seed it through the service (seed_history) or "
+                    "attach a fresh FleetScoringService instead")
+            if len(data):
+                self.service.seed_history(as_frame(data))
+        else:
+            self.store.clear()
+            if len(data):
+                self.store.append(as_frame(data))
+        self._ewma.clear()
 
     @property
     def history_frame(self) -> Optional[BenchmarkFrame]:
-        return self._frame
+        return self.store.frame
 
     # ------------------------------------------------------------- observe
     def observe(self, data: FrameOrRecords) -> List[WatchdogDecision]:
         """Score a new fingerprinting round (frame or records from the
         suite runner) in the context of previous rounds."""
         new = as_frame(data)
-        n_new = len(new)
-        combined = (new if self._frame is None
-                    else concat_frames([self._frame, new]))
-        first_new = len(combined) - n_new
-        keep = self._trim_indices(combined, self.history_per_chain)
-        is_new = keep >= first_new
-        self._frame = combined.select(keep)
+        if len(new) == 0:  # nothing observed: no scoring dispatch
+            return []
+        if self.service is not None:
+            # the service's store is shared (and may back fleet-wide
+            # drift analytics / durability), so the watchdog does not
+            # compact it — scoring context is capped by the service.
+            # Drain requests other producers queued first, so this
+            # round's quorum judges only the observed executions.
+            self.service.flush()
+            results = self.service.score_round(new)
+            probs_of_node = {node: r.anomaly_prob
+                             for node, r in results.items()}
+        else:
+            # context rule shared with the fleet service
+            # (store.context_with_new): the newest history rows per
+            # chain *as of before this round*, plus every new
+            # execution (all are scored and judged, however their
+            # timestamps interleave)
+            first_id = self.store.append(new)
+            frame = self.store.frame
+            sel, is_new = self.store.context_with_new(
+                first_id, self.history_per_chain)
+            if len(sel) == 0:  # empty round on an empty store
+                return []
+            res = self.engine.score(frame.select(sel))
+            self.store.attach(sel[is_new], res.anomaly_prob[is_new],
+                              res.codes[is_new])
+            codes = frame.machine_code[sel[is_new]]
+            probs = res.anomaly_prob[is_new]
+            probs_of_node = {
+                frame.machines[c]: probs[codes == c]
+                for c in np.unique(codes)}
+            self.store.compact(self.history_per_chain)
 
-        prob = self.engine.score(self._frame).anomaly_prob
-
-        # per-node quorum over this round's executions
-        codes = self._frame.machine_code[is_new]
-        probs = prob[is_new]
         decisions = []
-        for code in np.unique(codes):
-            node = self._frame.machines[code]
-            p_runs = probs[codes == code]
+        for node in sorted(probs_of_node):
+            p_runs = probs_of_node[node]
             frac = float((p_runs >= self.threshold).mean())
             flagged = frac >= self.quorum
             if flagged:
@@ -105,28 +174,28 @@ class PeronaWatchdog:
             decisions.append(WatchdogDecision(
                 node=node, anomaly_prob=float(p_runs.mean()),
                 flag_fraction=frac, flagged=flagged,
-                confirmed=confirmed))
-        decisions.sort(key=lambda d: d.node)
+                confirmed=confirmed,
+                anomaly_ewma=self._update_ewma(node, p_runs)))
         return decisions
 
-    @staticmethod
-    def _trim_indices(frame: BenchmarkFrame, keep: int) -> np.ndarray:
-        """Indices of the newest ``keep`` rows per (type x machine)
-        chain, in global chronological order."""
-        n = len(frame)
-        key = (frame.type_code.astype(np.int64)
-               * max(len(frame.machines), 1) + frame.machine_code)
-        order = np.lexsort((np.arange(n), frame.t, key))
-        key_sorted = key[order]
-        boundary = np.ones(n, bool)
-        boundary[1:] = key_sorted[1:] != key_sorted[:-1]
-        starts = np.where(boundary)[0]
-        lengths = np.diff(np.append(starts, n))
-        length_per_row = np.repeat(lengths, lengths)
-        pos = np.arange(n) - np.maximum.accumulate(
-            np.where(boundary, np.arange(n), 0))
-        kept = order[pos >= length_per_row - keep]
-        return kept[np.lexsort((kept, frame.t[kept]))]
+    def _update_ewma(self, node: str, probs) -> float:
+        """Fold a round's new scores into the node's running EWMA
+        (same recurrence as drift.ewma_series, in observation order)."""
+        acc = self._ewma.get(node)
+        a = self.drift_alpha
+        for p in probs:
+            acc = float(p) if acc is None else (1 - a) * acc + a * float(p)
+        if acc is None:
+            return float("nan")
+        self._ewma[node] = acc
+        return acc
+
+    # --------------------------------------------------------------- drift
+    def drift_report(self, alpha: Optional[float] = None):
+        """Per-node drift summaries over the stored, scored history
+        (see :func:`repro.fleet.drift.drift_report`)."""
+        return drift_report(self.store,
+                            self.drift_alpha if alpha is None else alpha)
 
     def excluded_nodes(self) -> List[str]:
         return [n for n, s in self._strikes.items()

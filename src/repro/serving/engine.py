@@ -1,33 +1,62 @@
 """Batched fingerprint scoring engine.
 
 ``FingerprintEngine`` wraps Perona's inference path — feature
-normalization/orientation/imputation, edge-attribute assembly, the GNN
-forward pass and the sigmoid anomaly head — in ONE ``jax.jit``-compiled
-function over shape-bucketed inputs. Frames are padded to the next
-bucket size (powers of two), so repeated scoring rounds of similar size
-reuse one compiled executable instead of re-tracing per round; the
-``trace_count`` property exposes how many tracings actually happened
-(asserted by the regression tests).
+normalization/orientation/imputation (paper §III-B), edge-attribute
+assembly, the GNN forward pass (§III-C) and the sigmoid anomaly head —
+in ONE ``jax.jit``-compiled function over shape-bucketed inputs. Frames
+are padded to the next bucket size (powers of two), so repeated scoring
+rounds of similar size reuse one compiled executable instead of
+re-tracing per round; the ``trace_count`` property exposes how many
+tracings actually happened (asserted by the regression tests).
+
+The padded input buffers are *donated* to the compiled call
+(``donate_argnums``): they are freshly materialized per ``score()``
+call and never reused, so XLA may overwrite them in place instead of
+allocating output buffers alongside them.
 
 Only the statistics-free graph topology (chain membership, predecessor
 indices, raw gauge gathering) stays in numpy — everything numeric runs
-in the compiled call.
+in the compiled call. The pure scoring function is exposed as
+:func:`make_score_fn` and the numpy input assembly as
+:func:`prepare_inputs` so the fleet layer (``repro.fleet.shard``) can
+vmap/shard the very same computation across devices.
 """
 
 from __future__ import annotations
 
+import contextlib
 import dataclasses
-from typing import Optional
+import warnings
+from typing import Callable, Dict, Optional
 
 import numpy as np
 
+
+@contextlib.contextmanager
+def silence_unusable_donation():
+    """The scoring outputs (N,), (N,T), (N,K) are all smaller than the
+    donated padded inputs, so XLA can never alias them input-to-output
+    and notes the donation as unusable on every compile. That is
+    expected here (donation still releases the inputs eagerly) —
+    suppress the note around the compiling call only, so other
+    donation sites in the process keep their diagnostics."""
+    with warnings.catch_warnings():
+        warnings.filterwarnings(
+            "ignore", message="Some donated buffers were not usable",
+            category=UserWarning)
+        yield
+
 from repro.common.bucketing import next_pow2
-from repro.core.graph_data import P_PREDECESSORS, graph_structure
+from repro.core.graph_data import graph_structure
 from repro.core.model import PeronaModel
 from repro.core.preprocess import Preprocessor
-from repro.fingerprint.frame import FrameOrRecords, as_frame
+from repro.fingerprint.frame import BenchmarkFrame, FrameOrRecords, as_frame
 
 MIN_BUCKET = 64
+
+# positional argument order of the pure scoring function (after params)
+ARG_NAMES = ("raw", "present", "type_ids", "nbr", "nbr_mask",
+             "edge_src", "dt", "t_src")
 
 
 def bucket_size(n: int, min_bucket: int = MIN_BUCKET) -> int:
@@ -43,13 +72,122 @@ class ScoreResult:
     n_padded: int  # bucket the batch was padded to
 
 
+def make_score_fn(model: PeronaModel, preproc: Preprocessor,
+                  on_trace: Optional[Callable[[], None]] = None):
+    """Pure (params, *ARG_NAMES arrays) -> dict scoring function.
+
+    Implements §III-B normalization / orientation / imputation / one-hot
+    enrichment and the §III-C forward + sigmoid anomaly head for one
+    padded batch. Preprocessor statistics are closed over as constants;
+    ``on_trace`` (if given) is invoked at trace time only — the
+    trace-count hook shared by the engine and the sharded fleet scorer.
+    """
+    import jax
+    import jax.numpy as jnp
+
+    lo = jnp.asarray(preproc.lo, jnp.float32)
+    hi = jnp.asarray(preproc.hi, jnp.float32)
+    maximize = jnp.asarray(preproc.maximize)
+    fill = jnp.asarray(preproc.fill_mean, jnp.float32)
+    elo = jnp.asarray(preproc.edge_lo, jnp.float32)
+    ehi = jnp.asarray(preproc.edge_hi, jnp.float32)
+    n_types = len(preproc.benchmark_types)
+
+    def _score(params, raw, present, type_ids, nbr, nbr_mask,
+               edge_src, dt, t_src):
+        if on_trace is not None:
+            on_trace()  # runs at trace time only
+        # §III-B normalization / orientation / imputation / one-hot
+        norm = jnp.clip((raw - lo) / (hi - lo), 0.0, 1.0)
+        norm = jnp.where(maximize, norm, 1.0 - norm)
+        norm = jnp.where(present, norm, fill)
+        onehot = jax.nn.one_hot(type_ids, n_types, dtype=jnp.float32)
+        x = jnp.concatenate([norm, onehot], axis=1)
+        # edge attributes: scaled source-run gauges + time encodings
+        efeat = jnp.clip((edge_src - elo) / (ehi - elo), 0.0, 1.0)
+        hod = (t_src / 3600.0) % 24.0
+        ang = 2 * jnp.pi * hod / 24
+        enc = jnp.stack([
+            jnp.log1p(dt) / 12.0,
+            jnp.minimum(dt / 3600.0, 1.0),
+            0.5 + 0.5 * jnp.sin(ang),
+            0.5 + 0.5 * jnp.cos(ang),
+        ], axis=-1)
+        edge = jnp.concatenate([efeat, enc], axis=-1)
+        edge = jnp.where(nbr_mask[..., None], edge, 0.0)
+        batch = {"x": x, "nbr": nbr, "nbr_mask": nbr_mask,
+                 "edge": edge}
+        out = model.forward(params, batch, train=False)
+        return {
+            "anomaly_prob": jax.nn.sigmoid(out["anom_logit"]),
+            "type_logits": out["type_logits"],
+            "codes": out["codes"],
+        }
+
+    return _score
+
+
+def prepare_features(preproc: Preprocessor, frame: BenchmarkFrame
+                     ) -> Dict[str, np.ndarray]:
+    """Per-row feature columns of a frame, ready for the scoring call
+    (un-padded; row-aligned with the frame). This is the expensive,
+    Python-dict-driven part of input assembly — the fleet store caches
+    its output per row so request assembly is a pure array gather."""
+    raw, present = preproc.raw_features(frame)
+    return {
+        "raw": raw.astype(np.float32),
+        "present": present,
+        "type_ids": preproc.type_ids(frame),
+        "edge_raw": preproc.raw_edges(frame).astype(np.float32),
+    }
+
+
+def assemble_inputs(features: Dict[str, np.ndarray], nbr: np.ndarray,
+                    dt: np.ndarray, t_src: np.ndarray, bucket: int
+                    ) -> Dict[str, np.ndarray]:
+    """Pad per-row features + graph topology to ``bucket`` rows and
+    gather the per-edge source-run gauges: the numpy dict of ARG_NAMES
+    arrays consumed by the compiled scoring call."""
+    n = nbr.shape[0]
+
+    def padf(arr, dtype=None, fillv=0.0):
+        # preallocate + slice-assign (np.pad's python path is slow
+        # enough to show up at fleet request rates)
+        out = np.full((bucket,) + arr.shape[1:],
+                      fillv, dtype or arr.dtype)
+        out[:n] = arr
+        return out
+
+    nbr_p = padf(nbr, fillv=-1)
+    # gather source-run gauges after padding (index -1 -> row 0,
+    # masked out inside the jit like the model's neighbor gather)
+    src = np.maximum(nbr_p, 0)
+    return {
+        "raw": padf(features["raw"], np.float32),
+        "present": padf(features["present"]),
+        "type_ids": padf(features["type_ids"]),
+        "nbr": nbr_p,
+        "nbr_mask": nbr_p >= 0,
+        "edge_src": padf(features["edge_raw"], np.float32)[src],
+        "dt": padf(dt, np.float32),
+        "t_src": padf(t_src, np.float32),
+    }
+
+
+def prepare_inputs(preproc: Preprocessor, frame: BenchmarkFrame,
+                   bucket: int) -> Dict[str, np.ndarray]:
+    """Full numpy input assembly for one frame (features + topology)."""
+    gs = graph_structure(frame)
+    return assemble_inputs(prepare_features(preproc, frame),
+                           gs.nbr, gs.dt, gs.t_src, bucket)
+
+
 class FingerprintEngine:
     """preprocess -> forward -> sigmoid in a single jit'd call."""
 
     def __init__(self, model: PeronaModel, params,
                  preproc: Preprocessor, min_bucket: int = MIN_BUCKET):
         import jax
-        import jax.numpy as jnp
 
         self.model = model
         self.params = params
@@ -57,85 +195,36 @@ class FingerprintEngine:
         self.min_bucket = min_bucket
         self._trace_count = 0
 
-        lo = jnp.asarray(preproc.lo, jnp.float32)
-        hi = jnp.asarray(preproc.hi, jnp.float32)
-        maximize = jnp.asarray(preproc.maximize)
-        fill = jnp.asarray(preproc.fill_mean, jnp.float32)
-        elo = jnp.asarray(preproc.edge_lo, jnp.float32)
-        ehi = jnp.asarray(preproc.edge_hi, jnp.float32)
-        n_types = len(preproc.benchmark_types)
+        def on_trace():
+            self._trace_count += 1
 
-        def _score(params, raw, present, type_ids, nbr, nbr_mask,
-                   edge_raw, dt, t_src):
-            self._trace_count += 1  # runs at trace time only
-            # §III-B normalization / orientation / imputation / one-hot
-            norm = jnp.clip((raw - lo) / (hi - lo), 0.0, 1.0)
-            norm = jnp.where(maximize, norm, 1.0 - norm)
-            norm = jnp.where(present, norm, fill)
-            onehot = jax.nn.one_hot(type_ids, n_types, dtype=jnp.float32)
-            x = jnp.concatenate([norm, onehot], axis=1)
-            # edge attributes: scaled source-run gauges + time encodings
-            efeat = jnp.clip((edge_raw - elo) / (ehi - elo), 0.0, 1.0)
-            hod = (t_src / 3600.0) % 24.0
-            ang = 2 * jnp.pi * hod / 24
-            enc = jnp.stack([
-                jnp.log1p(dt) / 12.0,
-                jnp.minimum(dt / 3600.0, 1.0),
-                0.5 + 0.5 * jnp.sin(ang),
-                0.5 + 0.5 * jnp.cos(ang),
-            ], axis=-1)
-            edge = jnp.concatenate([efeat, enc], axis=-1)
-            edge = jnp.where(nbr_mask[..., None], edge, 0.0)
-            batch = {"x": x, "nbr": nbr, "nbr_mask": nbr_mask,
-                     "edge": edge}
-            out = self.model.forward(params, batch, train=False)
-            return {
-                "anomaly_prob": jax.nn.sigmoid(out["anom_logit"]),
-                "type_logits": out["type_logits"],
-                "codes": out["codes"],
-            }
-
-        self._score = jax.jit(_score)
+        # donate the padded input buffers (everything but params): they
+        # are rebuilt from numpy on every call and never reused
+        self.donate_argnums = tuple(range(1, 1 + len(ARG_NAMES)))
+        self._score = jax.jit(
+            make_score_fn(model, preproc, on_trace=on_trace),
+            donate_argnums=self.donate_argnums)
 
     @property
     def trace_count(self) -> int:
         """Number of jit tracings so far (1 per distinct bucket)."""
         return self._trace_count
 
-    def score(self, data: FrameOrRecords) -> ScoreResult:
-        """Score one batch of benchmark executions (frame or records)."""
+    def prepare(self, frame: BenchmarkFrame):
+        """Device-ready (donatable) jnp inputs in ARG_NAMES order."""
         import jax.numpy as jnp
 
+        b = bucket_size(len(frame), self.min_bucket)
+        inputs = prepare_inputs(self.preproc, frame, b)
+        return tuple(jnp.asarray(inputs[k]) for k in ARG_NAMES), b
+
+    def score(self, data: FrameOrRecords) -> ScoreResult:
+        """Score one batch of benchmark executions (frame or records)."""
         frame = as_frame(data)
         n = len(frame)
-        gs = graph_structure(frame)
-        raw, present = self.preproc.raw_features(frame)
-        edge_raw = self.preproc.raw_edges(frame)
-        type_ids = self.preproc.type_ids(frame)
-
-        b = bucket_size(n, self.min_bucket)
-        pad = b - n
-        p = P_PREDECESSORS
-
-        def padf(arr, fillv=0.0):
-            w = [(0, pad)] + [(0, 0)] * (arr.ndim - 1)
-            return np.pad(arr, w, constant_values=fillv)
-
-        nbr = padf(gs.nbr, -1)
-        # gather source-run gauges after padding (index -1 -> row 0,
-        # masked out inside the jit like the model's neighbor gather)
-        src = np.maximum(nbr, 0)
-        out = self._score(
-            self.params,
-            jnp.asarray(padf(raw), jnp.float32),
-            jnp.asarray(padf(present)),
-            jnp.asarray(padf(type_ids)),
-            jnp.asarray(nbr),
-            jnp.asarray(nbr >= 0),
-            jnp.asarray(padf(edge_raw), jnp.float32)[src],
-            jnp.asarray(padf(gs.dt), jnp.float32),
-            jnp.asarray(padf(gs.t_src), jnp.float32),
-        )
+        args, b = self.prepare(frame)
+        with silence_unusable_donation():
+            out = self._score(self.params, *args)
         return ScoreResult(
             anomaly_prob=np.asarray(out["anomaly_prob"])[:n],
             type_logits=np.asarray(out["type_logits"])[:n],

@@ -1,0 +1,408 @@
+"""Fleet subsystem: store views/durability, micro-batched service
+parity + compile amortization, sharded-vs-single-device bit parity,
+drift analytics, watchdog-on-store integration."""
+
+import os
+import subprocess
+import sys
+import textwrap
+
+import jax
+import numpy as np
+import pytest
+from _trace_utils import expect_traces
+
+from repro.core.graph_data import build_graphs
+from repro.core.model import PeronaConfig, PeronaModel
+from repro.core.preprocess import Preprocessor
+from repro.fingerprint.runner import SuiteRunner
+from repro.fleet import (FingerprintStore, FleetScoringService,
+                         degrading_nodes, drift_report, ewma_series)
+from repro.runtime.watchdog import PeronaWatchdog
+from repro.serving.engine import FingerprintEngine
+
+
+@pytest.fixture(scope="module")
+def setup():
+    runner = SuiteRunner(seed=5)
+    machines = {"f0": "e2-medium", "f1": "n2-standard-4",
+                "f2": "e2-medium"}
+    frame = runner.run_frame(machines, runs_per_type=10,
+                             stress_fraction=0.2)
+    pre = Preprocessor().fit(frame)
+    batch = build_graphs(frame, pre)
+    cfg = PeronaConfig(feature_dim=pre.feature_dim,
+                       edge_dim=batch.edge.shape[-1])
+    model = PeronaModel(cfg)
+    params = model.init(jax.random.PRNGKey(0))  # untrained: scoring only
+    return runner, machines, frame, pre, model, params
+
+
+# ---------------------------------------------------------------- store
+
+def test_store_views_match_naive_filtering(setup):
+    _, _, frame, *_ = setup
+    store = FingerprintStore()
+    store.append(frame)
+    f = store.frame
+    t_lo, t_hi = float(np.quantile(f.t, 0.2)), float(np.quantile(f.t, 0.8))
+    for node in f.machines:
+        for btype in (None, "fio", "iperf3"):
+            idx = store.view(node, btype, t_min=t_lo, t_max=t_hi)
+            m = f.machine_code == f.machines.index(node)
+            if btype is not None:
+                m &= f.type_code == f.benchmark_types.index(btype)
+            m &= (f.t >= t_lo) & (f.t <= t_hi)
+            naive = np.nonzero(m)[0]
+            naive = naive[np.lexsort((naive, f.t[naive]))]
+            np.testing.assert_array_equal(idx, naive)
+
+
+def test_store_newest_per_chain(setup):
+    _, _, frame, *_ = setup
+    store = FingerprintStore()
+    store.append(frame)
+    f = store.frame
+    idx = store.view("f1", newest_per_chain=3)
+    # 6 benchmark-type chains x newest 3
+    assert len(idx) == 18
+    for b in range(len(f.benchmark_types)):
+        chain = np.nonzero((f.machine_code == f.machines.index("f1"))
+                           & (f.type_code == b))[0]
+        newest = chain[np.argsort(f.t[chain], kind="stable")][-3:]
+        got = idx[f.type_code[idx] == b]
+        assert set(got) == set(newest)
+
+
+def test_store_append_ids_and_compact(setup):
+    runner, machines, frame, *_ = setup
+    store = FingerprintStore()
+    first_a = store.append(frame)
+    more = runner.run_frame(machines, runs_per_type=2)
+    first_b = store.append(more)
+    assert first_a == 0 and first_b == len(frame)
+    assert len(store) == len(frame) + len(more)
+    full = store.frame
+    naive_keep = set()
+    for mc in range(len(full.machines)):
+        for bc in range(len(full.benchmark_types)):
+            chain = np.nonzero((full.machine_code == mc)
+                               & (full.type_code == bc))[0]
+            naive_keep |= set(
+                chain[np.argsort(full.t[chain], kind="stable")][-4:])
+    kept_ids = set(store.row_id[sorted(naive_keep)])
+    store.compact(per_chain=4)
+    f = store.frame
+    key = (f.machine_code.astype(np.int64) * len(f.benchmark_types)
+           + f.type_code)
+    _, counts = np.unique(key, return_counts=True)
+    assert counts.max() <= 4
+    # exactly the t-newest 4 per chain survive, ids intact, t-sorted
+    assert set(store.row_id) == kept_ids
+    assert np.all(np.diff(f.t) >= 0)
+
+
+def test_store_save_load_roundtrip(setup, tmp_path):
+    _, _, frame, pre, model, params = setup
+    engine = FingerprintEngine(model, params, pre)
+    store = FingerprintStore()
+    store.append(frame)
+    res = engine.score(store.frame)
+    store.attach(np.arange(len(frame)), res.anomaly_prob, res.codes)
+    path = os.path.join(tmp_path, "store.npz")
+    store.save(path)
+    loaded = FingerprintStore.load(path)
+    assert len(loaded) == len(store)
+    np.testing.assert_array_equal(loaded.row_id, store.row_id)
+    np.testing.assert_array_equal(loaded.anomaly, store.anomaly)
+    np.testing.assert_array_equal(loaded.codes, store.codes)
+    assert loaded.frame.machines == store.frame.machines
+    np.testing.assert_array_equal(loaded.frame.metrics,
+                                  store.frame.metrics)
+    # appends continue from the persisted id counter
+    assert loaded.append(frame.select(np.arange(3))) == len(store)
+
+
+def test_store_rejects_mixed_feature_appends(setup):
+    _, _, frame, pre, *_ = setup
+    from repro.serving.engine import prepare_features
+
+    store = FingerprintStore()
+    store.append(frame)
+    with pytest.raises(ValueError, match="mix"):
+        store.append(frame, features=prepare_features(pre, frame))
+
+
+# -------------------------------------------------------------- service
+
+def test_service_matches_per_request_engine(setup):
+    runner, machines, frame, pre, model, params = setup
+    engine = FingerprintEngine(model, params, pre)
+    svc = FleetScoringService(model, params, pre, context_per_chain=6,
+                              sharded=False)
+    svc.seed_history(frame)
+    results = svc.score_round(runner.run_frame(machines,
+                                               runs_per_type=2))
+    assert sorted(results) == sorted(machines)
+    for node, r in results.items():
+        assert len(r.anomaly_prob) == 12  # 6 types x 2 runs
+        assert len(r.context_row_ids) == 36  # 6 chains x 6 context
+        # reference: score the same (context + new) rows through the
+        # per-request engine path
+        ids = np.concatenate([r.context_row_ids, r.row_ids])
+        rows = np.nonzero(np.isin(svc.store.row_id, ids))[0]
+        rows = rows[np.lexsort((rows, svc.store.frame.t[rows]))]
+        ref = engine.score(svc.store.frame.select(rows))
+        is_new = np.isin(svc.store.row_id[rows], r.row_ids)
+        np.testing.assert_allclose(r.anomaly_prob,
+                                   ref.anomaly_prob[is_new], atol=2e-5)
+        np.testing.assert_allclose(r.codes, ref.codes[is_new],
+                                   atol=2e-4)
+        # scores persisted to the store
+        rows = np.nonzero(np.isin(svc.store.row_id, r.row_ids))[0]
+        assert not np.isnan(svc.store.anomaly[rows]).any()
+
+
+def test_service_micro_batches_amortize_compile(setup):
+    runner, machines, frame, pre, model, params = setup
+    svc = FleetScoringService(model, params, pre, context_per_chain=6,
+                              sharded=False)
+    svc.seed_history(frame)
+    with expect_traces(svc.scorer, 1):
+        svc.score_round(runner.run_frame(machines, runs_per_type=2))
+    assert svc.stats["dispatches"] == 1  # one bucket -> one dispatch
+    # same request shapes -> no retracing in later flushes
+    with expect_traces(svc.scorer, 0):
+        for _ in range(3):
+            svc.score_round(runner.run_frame(machines, runs_per_type=2))
+    assert svc.stats["requests_served"] == 4 * len(machines)
+
+
+def test_engine_donates_padded_inputs(setup):
+    """Every padded input buffer (all args but params) is donated in
+    both compiled scoring calls; repeated scoring keeps working since
+    buffers are rebuilt from numpy per call."""
+    from repro.fleet.shard import ShardedScorer
+    from repro.serving.engine import ARG_NAMES
+
+    _, _, frame, pre, model, params = setup
+    engine = FingerprintEngine(model, params, pre)
+    expected = tuple(range(1, 1 + len(ARG_NAMES)))
+    assert engine.donate_argnums == expected
+    scorer = ShardedScorer(model, pre, devices=jax.devices()[:1])
+    assert scorer.donate_argnums == expected
+    # repeated public scoring keeps working (buffers are rebuilt)
+    r1 = engine.score(frame)
+    r2 = engine.score(frame)
+    np.testing.assert_array_equal(r1.anomaly_prob, r2.anomaly_prob)
+
+
+def test_service_minimal_context_matches_full_history(setup):
+    """Streaming rounds: the service's receptive-field context
+    (P x tag_hops rows per chain) reproduces full-history rescoring
+    exactly — the §III-C chain graph gives each execution a bounded
+    ancestry."""
+    runner, machines, frame, pre, model, params = setup
+    engine = FingerprintEngine(model, params, pre)
+    svc = FleetScoringService(model, params, pre, sharded=False)
+    assert svc.context_per_chain == 6  # P=3 x tag_hops=2
+    svc.seed_history(frame)
+    rnd = runner.run_frame(machines, runs_per_type=2, t_offset=86400.0)
+    results = svc.score_round(rnd)
+    store = svc.store
+    first = min(r.row_ids.min() for r in results.values())
+    for node, r in results.items():
+        # full-history reference: every stored row of this node
+        rows = store.view(node)
+        ref = engine.score(store.frame.select(rows))
+        is_new = store.row_id[rows] >= first
+        np.testing.assert_allclose(r.anomaly_prob,
+                                   ref.anomaly_prob[is_new],
+                                   rtol=0, atol=1e-6)
+
+
+def test_service_burst_flush_matches_sequential(setup):
+    """Coalescing several queued rounds into one flush produces the
+    same scores as flushing round by round (ancestry closure)."""
+    runner, machines, frame, pre, model, params = setup
+    rounds = [SuiteRunner(seed=33).run_frame(
+        machines, runs_per_type=1, t_offset=(k + 1) * 86400.0)
+        for k in range(3)]
+
+    seq = FleetScoringService(model, params, pre, sharded=False)
+    seq.seed_history(frame)
+    seq_probs = {n: [] for n in machines}
+    for rnd in rounds:
+        for n, r in seq.score_round(rnd).items():
+            seq_probs[n].append(r.anomaly_prob)
+
+    burst = FleetScoringService(model, params, pre, sharded=False)
+    burst.seed_history(frame)
+    for rnd in rounds:
+        burst.submit(rnd)
+    merged = burst.flush()
+    assert burst.stats["flushes"] == 1
+    for n in machines:
+        np.testing.assert_allclose(
+            merged[n].anomaly_prob, np.concatenate(seq_probs[n]),
+            rtol=0, atol=1e-6)
+
+
+# ---------------------------------------------------------------- drift
+
+def test_ewma_series_matches_recurrence():
+    rng = np.random.default_rng(0)
+    x = rng.random(50)
+    alpha = 0.25
+    got = ewma_series(x, alpha)
+    acc = x[0]
+    for i, v in enumerate(x):
+        if i:
+            acc = (1 - alpha) * acc + alpha * v
+        assert got[i] == pytest.approx(acc)
+
+
+def test_drift_report_over_store(setup):
+    runner, machines, frame, pre, model, params = setup
+    svc = FleetScoringService(model, params, pre, context_per_chain=6,
+                              sharded=False)
+    svc.seed_history(frame)
+    for _ in range(3):
+        svc.score_round(runner.run_frame(machines, runs_per_type=1))
+    report = drift_report(svc.store)
+    assert sorted(report) == sorted(machines)
+    for d in report.values():
+        assert d.n_scored == 18  # 3 rounds x 6 types
+        assert 0.0 <= d.anomaly_ewma <= 1.0
+        assert set(d.aspect_ewma) == {"cpu", "memory", "disk",
+                                      "network"}
+        assert all(v >= 0 for v in d.aspect_ewma.values())
+    # degrading_nodes honors threshold + min history
+    assert degrading_nodes(report, ewma_threshold=1.1) == {}
+    assert sorted(degrading_nodes(report, ewma_threshold=0.0)) == \
+        sorted(machines)
+
+
+# ------------------------------------------------------------- watchdog
+
+def test_watchdog_runs_on_store_and_reports_drift(setup):
+    runner, machines, frame, pre, model, params = setup
+    wd = PeronaWatchdog(model, params, pre, history_per_chain=6)
+    wd.history = frame
+    decisions = wd.observe(runner.run_frame(machines, runs_per_type=1))
+    assert [d.node for d in decisions] == sorted(machines)
+    assert all(np.isfinite(d.anomaly_ewma) for d in decisions)
+    # new-round scores were attached to the store -> drift is queryable
+    report = wd.drift_report()
+    assert sorted(report) == sorted(machines)
+    assert wd.store.frame is wd.history_frame
+
+
+def test_watchdog_empty_round_and_fresh_store(setup):
+    """An empty round on a history-less watchdog must not crash, in
+    either scoring path."""
+    _, machines, frame, pre, model, params = setup
+    empty = frame.select(np.arange(0))
+    wd = PeronaWatchdog(model, params, pre)
+    assert wd.observe(empty) == []
+    # with history present, an empty round costs no scoring dispatch
+    wd.history = frame
+    assert wd.observe(empty) == []
+    assert wd.engine.trace_count == 0
+    svc = FleetScoringService(model, params, pre, sharded=False)
+    wd2 = PeronaWatchdog(model, params, pre, service=svc)
+    assert wd2.observe(empty) == []
+    assert wd2.history == []
+
+
+def test_watchdog_through_fleet_service(setup):
+    runner, machines, frame, pre, model, params = setup
+    svc = FleetScoringService(model, params, pre, context_per_chain=6,
+                              sharded=False)
+    wd = PeronaWatchdog(model, params, pre, service=svc,
+                        history_per_chain=6)
+    wd.history = frame
+    for _ in range(2):
+        decisions = wd.observe(runner.run_frame(machines,
+                                                runs_per_type=1))
+        assert [d.node for d in decisions] == sorted(machines)
+    assert wd.store is svc.store
+    assert svc.stats["requests_served"] == 2 * len(machines)
+    # engine-path and service-path watchdogs agree on the decisions
+    wd2 = PeronaWatchdog(model, params, pre, history_per_chain=6)
+    wd2.history = frame
+    r2 = SuiteRunner(seed=99).run_frame(machines, runs_per_type=1)
+    d_service = PeronaWatchdog(model, params, pre,
+                               service=FleetScoringService(
+                                   model, params, pre,
+                                   context_per_chain=6, sharded=False),
+                               history_per_chain=6)
+    d_service.history = frame
+    a = wd2.observe(r2)
+    b = d_service.observe(r2)
+    for da, db in zip(a, b):
+        assert da.node == db.node
+        assert da.flagged == db.flagged
+        assert da.anomaly_prob == pytest.approx(db.anomaly_prob,
+                                                abs=2e-5)
+
+
+# ------------------------------------------------- sharded parity (slow)
+
+@pytest.mark.slow
+def test_sharded_scoring_bit_identical_subprocess():
+    """8 virtual CPU devices: shard_map'd fleet scoring must produce
+    bit-identical scores to a single-device scorer."""
+    code = textwrap.dedent("""
+        import os
+        os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+        import jax
+        import numpy as np
+        from repro.core.graph_data import build_graphs
+        from repro.core.model import PeronaConfig, PeronaModel
+        from repro.core.preprocess import Preprocessor
+        from repro.fingerprint.runner import SuiteRunner
+        from repro.fleet import FleetScoringService
+        from repro.fleet.shard import ShardedScorer
+
+        assert jax.device_count() == 8
+        runner = SuiteRunner(seed=2)
+        machines = {f"s{i}": "e2-medium" for i in range(16)}
+        frame = runner.run_frame(machines, runs_per_type=6,
+                                 stress_fraction=0.2)
+        pre = Preprocessor().fit(frame)
+        batch = build_graphs(frame, pre)
+        cfg = PeronaConfig(feature_dim=pre.feature_dim,
+                           edge_dim=batch.edge.shape[-1])
+        model = PeronaModel(cfg)
+        params = model.init(jax.random.PRNGKey(0))
+
+        def scores(devices):
+            svc = FleetScoringService(model, params, pre,
+                                      context_per_chain=4,
+                                      devices=devices)
+            svc.seed_history(frame)
+            res = svc.score_round(
+                SuiteRunner(seed=3).run_frame(machines, runs_per_type=1))
+            return res, svc
+
+        res8, svc8 = scores(jax.devices())
+        res1, svc1 = scores(jax.devices()[:1])
+        assert svc8.scorer.n_devices == 8
+        assert svc1.scorer.n_devices == 1
+        for node in res1:
+            a, b = res8[node], res1[node]
+            assert np.array_equal(a.anomaly_prob, b.anomaly_prob)
+            assert np.array_equal(a.codes, b.codes)
+            assert np.array_equal(a.type_logits, b.type_logits)
+        print("OK bit-identical across", svc8.scorer.n_devices,
+              "devices")
+    """)
+    env = dict(os.environ)
+    env["PYTHONPATH"] = "src"
+    proc = subprocess.run(
+        [sys.executable, "-c", code],
+        cwd=os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+        env=env, capture_output=True, text=True, timeout=420)
+    assert proc.returncode == 0, proc.stderr[-2000:]
+    assert "OK bit-identical" in proc.stdout

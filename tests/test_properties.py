@@ -99,6 +99,43 @@ def test_moe_router_weights_normalized(seed):
     assert float(aux) >= 0
 
 
+@settings(max_examples=60, deadline=None)
+@given(st.integers(0, 1 << 20), st.sampled_from([1, 2, 8, 64, 256]))
+def test_next_pow2_bounds_and_form(n, floor):
+    """next_pow2 returns a power of two >= max(n, floor)."""
+    from repro.common.bucketing import next_pow2
+
+    b = next_pow2(n, floor)
+    assert b >= n and b >= floor
+    assert b & (b - 1) == 0  # power of two
+    # tight: halving (while respecting the floor) would undershoot
+    assert b == floor or b // 2 < max(n, floor)
+
+
+@settings(max_examples=60, deadline=None)
+@given(st.integers(0, 1 << 20), st.integers(0, 1 << 20),
+       st.sampled_from([1, 2, 8, 64, 256]))
+def test_next_pow2_monotone(m, n, floor):
+    from repro.common.bucketing import next_pow2
+
+    lo, hi = min(m, n), max(m, n)
+    assert next_pow2(lo, floor) <= next_pow2(hi, floor)
+
+
+@settings(max_examples=40, deadline=None)
+@given(st.integers(0, 20), st.sampled_from([1, 2, 8, 64, 256]))
+def test_next_pow2_idempotent_on_powers_of_two(k, floor):
+    """Powers of two at or above the floor are fixed points, and
+    re-bucketing a bucket never grows it."""
+    from repro.common.bucketing import next_pow2
+
+    p = 1 << k
+    if p >= floor:
+        assert next_pow2(p, floor) == p
+    b = next_pow2(p, floor)
+    assert next_pow2(b, floor) == b
+
+
 def test_elastic_reshard_roundtrip():
     """reshard_tree re-resolves divisibility on the new mesh and keeps
     values intact (single-device meshes here; multi-device resolution is

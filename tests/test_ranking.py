@@ -1,0 +1,75 @@
+"""core/ranking: aspect grouping, p-norm limits, degenerate machines."""
+
+import numpy as np
+import pytest
+
+from repro.core.ranking import (ASPECT_OF_TYPE, aspect_scores,
+                                code_scores, machine_score_vector,
+                                rank_machines)
+
+
+def test_code_scores_pnorm_approaches_max():
+    rng = np.random.default_rng(0)
+    codes = rng.normal(size=(32, 16))
+    mx = np.abs(codes).max(-1)
+    d = codes.shape[-1]
+    # exact p-norm sandwich: max <= ||x||_p <= max * d^(1/p), so the
+    # score converges to the max coordinate as p grows
+    for p in (10.0, 50.0, 200.0):
+        s = code_scores(codes, p=p)
+        assert np.all(s >= mx - 1e-9)
+        assert np.all(s <= mx * d ** (1.0 / p) + 1e-9)
+    np.testing.assert_allclose(code_scores(codes, p=200.0), mx,
+                               rtol=d ** (1.0 / 200.0) - 1 + 1e-6)
+    # monotone: larger p never increases the score
+    s10 = code_scores(codes, p=10.0)
+    s50 = code_scores(codes, p=50.0)
+    assert np.all(s50 <= s10 + 1e-9)
+
+
+def test_aspect_scores_grouping_matches_aspect_of_type():
+    types = list(ASPECT_OF_TYPE)
+    machines = ["m0", "m1"]
+    n = len(types) * len(machines)
+    type_names = types * len(machines)
+    machine_col = [m for m in machines for _ in types]
+    rng = np.random.default_rng(1)
+    codes = rng.normal(size=(n, 8))
+    out = aspect_scores(codes, type_names, machine_col)
+    assert sorted(out) == machines
+    s = code_scores(codes)
+    for m in machines:
+        # every machine covers exactly the aspects of its types
+        assert set(out[m]) == set(ASPECT_OF_TYPE.values())
+        for aspect in set(ASPECT_OF_TYPE.values()):
+            member = [s[i] for i in range(n)
+                      if machine_col[i] == m
+                      and ASPECT_OF_TYPE[type_names[i]] == aspect]
+            assert out[m][aspect] == pytest.approx(np.mean(member))
+
+
+def test_aspect_scores_single_benchmark_machine():
+    """A machine with one execution of one type must not crash and
+    reports only that type's aspect."""
+    codes = np.asarray([[1.0, -2.0, 0.5]])
+    out = aspect_scores(codes, ["fio"], ["lonely"])
+    assert list(out) == ["lonely"]
+    assert list(out["lonely"]) == ["disk"]
+    assert out["lonely"]["disk"] == pytest.approx(
+        float(code_scores(codes)[0]))
+    # ranking / vector extraction handle the sparse aspect dict
+    assert rank_machines(out) == ["lonely"]
+    assert rank_machines(out, aspect="network") == ["lonely"]
+    vec = machine_score_vector(out, "lonely")
+    assert vec.shape == (4,)
+    assert vec[2] > 0 and vec[0] == vec[1] == vec[3] == 0.0
+
+
+def test_rank_machines_orders_by_aspect_and_mean():
+    scores = {
+        "fast-disk": {"disk": 3.0, "cpu": 1.0},
+        "fast-cpu": {"disk": 1.0, "cpu": 3.5},
+    }
+    assert rank_machines(scores, aspect="disk")[0] == "fast-disk"
+    assert rank_machines(scores, aspect="cpu")[0] == "fast-cpu"
+    assert rank_machines(scores)[0] == "fast-cpu"  # higher mean
