@@ -6,13 +6,16 @@ Prints ``name,us_per_call,derived`` CSV. Modules:
                       + HPO engine (sequential vs vmapped) wall-clock
   bench_workflows   — paper §IV-E Table III (Lotaru) + Tarema groups
   bench_fleet       — fleet service throughput (loop vs micro-batched
-                      vs sharded requests/s)
+                      vs sharded requests/s) + amortized-append check
+  bench_optimizer   — §IV-D scenario-matrix replay: sequential numpy
+                      searches vs the batched vmapped lane engine
   bench_kernels     — kernel-path microbenchmarks
   bench_roofline    — dry-run roofline summary (deliverable g)
 
-The tuning module's rows are written to ``BENCH_tuning.json`` and the
-fleet module's to ``BENCH_fleet.json`` so both perf trajectories are
-tracked across PRs.
+The tuning module's rows are written to ``BENCH_tuning.json``, the
+fleet module's to ``BENCH_fleet.json`` and the optimizer module's to
+``BENCH_optimizer.json`` so the perf trajectories are tracked across
+PRs.
 
 Usage: PYTHONPATH=src python -m benchmarks.run [--only <module-substr>]
 ``--quick`` shrinks workload counts; ``--smoke`` (the CI step) shrinks
@@ -38,11 +41,15 @@ def main() -> None:
                     help="where to write the tuning rows as JSON")
     ap.add_argument("--fleet-json-out", default="BENCH_fleet.json",
                     help="where to write the fleet rows as JSON")
+    ap.add_argument("--optimizer-json-out",
+                    default="BENCH_optimizer.json",
+                    help="where to write the optimizer rows as JSON")
     args = ap.parse_args()
     quick = args.quick or args.smoke
 
     from benchmarks import (bench_fingerprint, bench_fleet,
-                            bench_kernels, bench_roofline, bench_tuning,
+                            bench_kernels, bench_optimizer,
+                            bench_roofline, bench_tuning,
                             bench_workflows)
 
     n_workloads = (3 if args.smoke else 6) if quick else 18
@@ -61,10 +68,13 @@ def main() -> None:
         ("workflows", lambda rows: bench_workflows.run(
             rows, runs_per_type=wf_runs, epochs=wf_epochs)),
         ("fleet", lambda rows: bench_fleet.run(rows, quick=quick)),
+        ("optimizer", lambda rows: bench_optimizer.run(rows,
+                                                       quick=quick)),
         ("kernels", lambda rows: bench_kernels.run(rows)),
         ("roofline", lambda rows: bench_roofline.run(rows)),
     ]
-    json_out = {"tuning": args.json_out, "fleet": args.fleet_json_out}
+    json_out = {"tuning": args.json_out, "fleet": args.fleet_json_out,
+                "optimizer": args.optimizer_json_out}
 
     rows = [("name", "us_per_call", "derived")]
     for name, fn in modules:

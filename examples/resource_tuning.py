@@ -1,17 +1,23 @@
 """Paper §IV-D use case: iterative cloud-configuration optimization with
-Perona-weighted acquisition (CherryPick / Arrow on the scout-like
-dataset).
+Perona-weighted acquisition — replayed through the batched BO engine.
+
+The scenario matrix (workload x tuner variant x fleet condition) runs
+as parallel vmapped GP lanes in one scanned device dispatch
+(``repro.optimizer``); every lane reproduces the sequential
+CherryPick/Arrow trace exactly, so the printed results are the paper's
+comparison at a fraction of the wall clock (see BENCH_optimizer.json).
 
     PYTHONPATH=src python examples/resource_tuning.py
 """
 
+import time
+
 import numpy as np
 
-from repro.core.ranking import machine_score_vector
-from repro.tuning.arrow import Arrow
-from repro.tuning.cherrypick import CherryPick
-from repro.tuning.perona_weights import (PeronaAcquisitionWeighter,
-                                         fingerprint_machine_scores)
+from repro.optimizer import (HEALTHY, build_scenarios, drifted_condition,
+                             replay_scenarios)
+from repro.optimizer.scenarios import VARIANTS
+from repro.tuning.perona_weights import fingerprint_machine_scores
 from repro.tuning.scout import VM_TYPES, ScoutDataset, WORKLOAD_NAMES
 
 
@@ -24,33 +30,46 @@ def main():
     print("fingerprinting the 9 AWS machine types (540 executions)...")
     scores = fingerprint_machine_scores(VM_TYPES, runs_per_type=10,
                                         epochs=40)
-    weighter = PeronaAcquisitionWeighter(ds, scores)
-    low_fn = lambda wl, c: machine_score_vector(scores, c.vm_type)
 
-    for wl in WORKLOAD_NAMES[:4]:
-        rts = [ds.runtime_s(wl, c) for c in ds.configs]
-        limit = float(np.percentile(rts, 40))
-        rows = {}
-        rows["cherrypick"] = CherryPick(ds, limit, seed=2).search(wl)
-        rows["cherrypick+perona"] = CherryPick(
-            ds, limit, seed=2, acquisition_weighter=weighter).search(wl)
-        rows["arrow"] = Arrow(ds, limit, seed=2).search(wl)
-        rows["arrow+perona"] = Arrow(ds, limit, seed=2,
-                                     low_level_fn=low_fn,
-                                     acquisition_weighter=weighter
-                                     ).search(wl)
-        print(f"\n{wl} (runtime limit {limit:.0f}s):")
-        for name, tr in rows.items():
-            best = tr.best_valid_cost[-1]
-            cfg = min(
-                ((c, co) for c, co, r in
-                 zip(tr.evaluated, tr.costs, tr.runtimes) if r <= limit),
-                key=lambda x: x[1], default=(None, float("inf")))[0]
-            print(f"  {name:20s} best=${best:.4f} "
-                  f"({cfg.vm_type} x{cfg.count} | "
-                  f"search ${tr.search_cost:.2f}, "
-                  f"{len(tr.evaluated)} runs)" if cfg else
-                  f"  {name:20s} no valid config found")
+    # fleet conditions: healthy, plus a degraded fleet derived from
+    # the drift analytics of a simulated c4 fleet losing cpu quality
+    # (the same condition BENCH_optimizer.json tracks)
+    degraded = drifted_condition(
+        ("c4.large", "c4.xlarge", "c4.2xlarge"), name="c4-cpu-degraded")
+
+    workloads = WORKLOAD_NAMES[:4]
+    scens = build_scenarios(ds, workloads=workloads, seeds=(1,),
+                            conditions=(HEALTHY, degraded))
+    t0 = time.perf_counter()
+    traces = replay_scenarios(ds, scens, scores)
+    dt = time.perf_counter() - t0
+    print(f"replayed {len(scens)} searches "
+          f"({len(workloads)} workloads x {len(VARIANTS)} variants x "
+          f"2 fleet conditions) in {dt:.2f}s — one scanned dispatch\n")
+
+    by_key = {(s.workload, s.variant, s.condition.name): t
+              for s, t in zip(scens, traces)}
+    for wl in workloads:
+        limit = next(s.limit for s in scens if s.workload == wl)
+        print(f"{wl} (runtime limit {limit:.0f}s):")
+        for cond in ("healthy", degraded.name):
+            for variant in VARIANTS:
+                tr = by_key[(wl, variant, cond)]
+                best = tr.best_valid_cost[-1]
+                cfg = min(
+                    ((c, co) for c, co, r in
+                     zip(tr.evaluated, tr.costs, tr.runtimes)
+                     if r <= limit),
+                    key=lambda x: x[1], default=(None, np.inf))[0]
+                tag = f"{variant:18s} [{cond}]"
+                if cfg is not None:
+                    print(f"  {tag:38s} best=${best:.4f} "
+                          f"({cfg.vm_type} x{cfg.count} | "
+                          f"search ${tr.search_cost:.2f}, "
+                          f"{len(tr.evaluated)} runs)")
+                else:
+                    print(f"  {tag:38s} no valid config found")
+        print()
 
 
 if __name__ == "__main__":

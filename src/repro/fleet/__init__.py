@@ -10,7 +10,8 @@
   analytics consumed by ``runtime.watchdog.PeronaWatchdog``.
 """
 
-from repro.fleet.drift import (NodeDrift, degrading_nodes, drift_report,
+from repro.fleet.drift import (NodeDrift, degradation_factors,
+                               degrading_nodes, drift_report,
                                ewma_series)
 from repro.fleet.service import FleetResult, FleetScoringService
 from repro.fleet.shard import ShardedScorer
@@ -18,6 +19,6 @@ from repro.fleet.store import FingerprintStore
 
 __all__ = [
     "FingerprintStore", "ShardedScorer", "FleetScoringService",
-    "FleetResult", "NodeDrift", "drift_report", "degrading_nodes",
-    "ewma_series",
+    "FleetResult", "NodeDrift", "drift_report", "degradation_factors",
+    "degrading_nodes", "ewma_series",
 ]

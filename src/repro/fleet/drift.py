@@ -134,3 +134,18 @@ def degrading_nodes(report: Dict[str, NodeDrift],
     return {n: d for n, d in report.items()
             if d.n_scored >= min_scored
             and d.anomaly_ewma >= ewma_threshold}
+
+
+def degradation_factors(report: Dict[str, NodeDrift],
+                        rel_drop: float = 0.2
+                        ) -> Dict[str, Dict[str, float]]:
+    """Per-node relative quality drops, {node: {aspect: fraction}}:
+    each node's aspects whose quality EWMA fell at least ``rel_drop``
+    below its lifetime mean. ``optimizer.scenarios.condition_from_drift``
+    aggregates these into degraded-fleet search scenarios."""
+    out = {}
+    for node, d in report.items():
+        degraded = d.degraded_aspects(rel_drop)
+        if degraded:
+            out[node] = degraded
+    return out

@@ -1,0 +1,35 @@
+"""Batched Bayesian-optimization replay engine (paper §IV-D at scale).
+
+The sequential reference tuners live in ``repro.tuning`` (CherryPick /
+Arrow, one numpy GP search at a time). This package replays *many*
+configuration searches as parallel vmapped lanes on device:
+
+- :mod:`repro.optimizer.gp` — batched masked RBF GP (fit + predict as
+  pure jnp ops, pinned against ``tuning/gp.py``);
+- :mod:`repro.optimizer.acquire` — expected improvement and the §IV-D
+  Perona acquisition weighting as pure array ops;
+- :mod:`repro.optimizer.replay` — full BO search loops as one
+  ``lax.scan`` over rounds, every lane advanced per round;
+- :mod:`repro.optimizer.scenarios` — the §IV-D scenario matrix
+  (workload x seed x tuner variant x fleet condition) over the scout
+  simulator, including degraded-node fleets from ``fleet.drift``.
+"""
+
+from repro.optimizer.replay import (REPLAY_TRACES, BatchReplayResult,
+                                    ReplayConfig, replay,
+                                    traces_from_result)
+from repro.optimizer.scenarios import (HEALTHY, FleetCondition, Scenario,
+                                       build_scenarios,
+                                       condition_from_drift,
+                                       degrade_scores, drifted_condition,
+                                       lane_tables, reference_search,
+                                       replay_scenarios,
+                                       simulate_degraded_fleet)
+
+__all__ = [
+    "REPLAY_TRACES", "BatchReplayResult", "ReplayConfig", "replay",
+    "traces_from_result", "HEALTHY", "FleetCondition", "Scenario",
+    "build_scenarios", "condition_from_drift", "degrade_scores",
+    "drifted_condition", "lane_tables", "reference_search",
+    "replay_scenarios", "simulate_degraded_fleet",
+]

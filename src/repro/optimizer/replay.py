@@ -1,0 +1,228 @@
+"""Vmapped BO search lanes as one ``lax.scan`` over rounds.
+
+Replays many CherryPick/Arrow-style configuration searches (paper
+§IV-D) in parallel: every *lane* is one (workload, seed, tuner variant,
+fleet condition) scenario over the same candidate grid; one scan step
+advances every still-active lane by one BO round (masked GP fit on the
+lane's evaluated set, EI + optional Perona weighting, stopping rules,
+argmax selection). The whole search is a single device dispatch —
+carries are donated, lanes and observation slots are pow2-padded
+(``common.bucketing.next_pow2``) so repeated replays of similar
+matrices reuse one compiled program (``REPLAY_TRACES`` counts
+tracings; tests assert amortization).
+
+All math runs in float64 (``jax.experimental.enable_x64`` around the
+dispatch) so batched lanes reproduce the sequential scipy traces
+bit-for-bit on identical seeds: same evaluated configs, same
+best-valid-cost curves (see tests/test_optimizer.py).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import List, Optional
+
+import numpy as np
+
+from repro.common.bucketing import next_pow2
+from repro.core.trainer import TraceCount
+
+#: Ticked once per tracing of the scanned replay program.
+REPLAY_TRACES = TraceCount()
+
+
+@dataclasses.dataclass(frozen=True)
+class ReplayConfig:
+    """Search hyperparameters, matching the sequential defaults
+    (``CherryPick.__init__`` / ``GP`` / ``PeronaAcquisitionWeighter``)."""
+
+    max_runs: int = 9
+    n_init: int = 3
+    ei_threshold: float = 0.1
+    noise: float = 1e-3
+    xi: float = 0.01
+    strength: float = 0.3
+    per_dollar: bool = True
+
+
+@dataclasses.dataclass
+class LaneTables:
+    """Per-lane constant tables (numpy, lane-stacked; L lanes over a
+    shared candidate grid of C configurations, feature dim D)."""
+
+    x_train: np.ndarray  # (L, C, D) GP features of *evaluated* configs
+    x_cand: np.ndarray  # (L, C, D) GP features of candidates (Arrow's
+    #                      imputation quirk makes these differ, see
+    #                      scenarios.lane_tables)
+    y: np.ndarray  # (L, C) constraint-penalized objective
+    runtime: np.ndarray  # (L, C) runtimes (constraint checks)
+    cost: np.ndarray  # (L, C) raw execution cost (trace reporting)
+    limit: np.ndarray  # (L,) runtime constraint
+    price: np.ndarray  # (L, C) $/h of the candidate's machine type
+    norm_scores: np.ndarray  # (L, C, 4) normalized fingerprint scores
+    util_low: np.ndarray  # (L, C, 4) per-run utilization metrics
+    use_weighter: np.ndarray  # (L,) Perona-weighted lane flag
+    init_idx: np.ndarray  # (L, n_init) seeded init draws
+
+    def __len__(self) -> int:
+        return len(self.y)
+
+
+@dataclasses.dataclass
+class BatchReplayResult:
+    chosen: np.ndarray  # (L, max_runs) evaluated config indices, -1 pad
+    count: np.ndarray  # (L,) evaluations performed per lane
+    dispatches: int  # device dispatches of this replay (always 1)
+
+
+def _lane_step(sel, count, active, xt, xc, y_tab, r_tab, ulow, ns,
+               price, limit, use_w, *, cfg: ReplayConfig, slots: int):
+    """One BO round of one lane (vmapped over lanes by the caller)."""
+    import jax.numpy as jnp
+
+    from repro.optimizer.acquire import (expected_improvement,
+                                         perona_weight_factors)
+    from repro.optimizer.gp import gp_fit, gp_predict
+
+    n_cand = y_tab.shape[0]
+    idx = jnp.maximum(sel, 0)
+    omask = jnp.arange(cfg.max_runs) < count
+    # pad the observation axis to the pow2 slot count
+    idx_p = jnp.zeros(slots, sel.dtype).at[: cfg.max_runs].set(idx)
+    mask_p = jnp.arange(slots) < count
+
+    x_obs = xt[idx_p]
+    y_obs = y_tab[idx_p]
+    state = gp_fit(x_obs, y_obs, mask_p, noise=cfg.noise,
+                   median_rows=cfg.max_runs)
+    mu, sigma = gp_predict(state, xc)
+    best = jnp.min(jnp.where(mask_p, y_obs, jnp.inf))
+    ei = expected_improvement(mu, sigma, best, xi=cfg.xi)
+
+    util = jnp.sum(jnp.where(mask_p[:, None], ulow[idx_p], 0.0),
+                   axis=0) / count
+    any_valid = jnp.any(mask_p & (r_tab[idx_p] <= limit))
+    factor = perona_weight_factors(util, ns, price, any_valid,
+                                   strength=cfg.strength,
+                                   per_dollar=cfg.per_dollar)
+    ei = jnp.where(use_w, ei * factor, ei)
+
+    seen = jnp.zeros(n_cand, jnp.int32).at[idx].add(
+        omask.astype(jnp.int32)) > 0
+    ei = jnp.where(seen, -jnp.inf, ei)
+    # float32-rounded selection grid, shared with the sequential
+    # reference (see CherryPick.search): deterministic tie-breaks on
+    # ulp-close candidates regardless of backend rounding
+    ei = ei.astype(jnp.float32).astype(jnp.float64)
+
+    mx = jnp.max(ei)
+    stop_flat = mx <= 0.0
+    stop_converged = ((mx / jnp.maximum(best, 1e-9) < cfg.ei_threshold)
+                      & (count >= cfg.n_init + 2))
+    advance = active & ~stop_flat & ~stop_converged
+    pick = jnp.argmax(ei).astype(sel.dtype)
+    sel = sel.at[count].set(jnp.where(advance, pick, sel[count]))
+    count = count + advance.astype(count.dtype)
+    return sel, count, advance
+
+
+@functools.lru_cache(maxsize=32)
+def _replay_fn(cfg: ReplayConfig, lanes: int, slots: int, n_cand: int,
+               dim: int, rounds: int):
+    """Jitted scan program for one (config, shape) signature."""
+    import jax
+
+    step = functools.partial(_lane_step, cfg=cfg, slots=slots)
+    step_v = jax.vmap(step)
+
+    def run(carry, tables):
+        REPLAY_TRACES.tick()
+
+        def scan_step(c, _):
+            sel, count, active = c
+            sel, count, active = step_v(sel, count, active, *tables)
+            return (sel, count, active), None
+
+        (sel, count, _), _ = jax.lax.scan(scan_step, carry, None,
+                                          length=rounds)
+        return sel, count
+
+    return jax.jit(run, donate_argnums=(0,))
+
+
+def replay(tables: LaneTables,
+           cfg: Optional[ReplayConfig] = None) -> BatchReplayResult:
+    """Run every lane's full search as one scanned device dispatch."""
+    import jax
+    from jax.experimental import enable_x64
+
+    cfg = ReplayConfig() if cfg is None else cfg
+    n_lanes = len(tables)
+    if n_lanes == 0:
+        return BatchReplayResult(
+            chosen=np.zeros((0, cfg.max_runs), np.int32),
+            count=np.zeros(0, np.int32), dispatches=0)
+    lanes = next_pow2(n_lanes)
+    slots = next_pow2(cfg.max_runs)
+    n_cand, dim = tables.x_train.shape[1:]
+    rounds = cfg.max_runs - cfg.n_init
+
+    def pad(a):  # pad the lane axis by repeating lane 0 (masked out)
+        if len(a) == lanes:
+            return a
+        reps = np.repeat(a[:1], lanes - len(a), axis=0)
+        return np.concatenate([a, reps], axis=0)
+
+    sel0 = np.full((lanes, cfg.max_runs), -1, np.int32)
+    sel0[:, : cfg.n_init] = pad(tables.init_idx)
+    count0 = np.full(lanes, cfg.n_init, np.int32)
+    active0 = np.ones(lanes, bool)
+
+    from repro.serving.engine import silence_unusable_donation
+
+    fn = _replay_fn(cfg, lanes, slots, n_cand, dim, rounds)
+    with enable_x64(), silence_unusable_donation():
+        jnp_tables = tuple(
+            jax.numpy.asarray(pad(a)) for a in (
+                tables.x_train.astype(np.float64),
+                tables.x_cand.astype(np.float64),
+                tables.y.astype(np.float64),
+                tables.runtime.astype(np.float64),
+                tables.util_low.astype(np.float64),
+                tables.norm_scores.astype(np.float64),
+                tables.price.astype(np.float64),
+                tables.limit.astype(np.float64),
+                tables.use_weighter.astype(bool)))
+        carry0 = (jax.numpy.asarray(sel0), jax.numpy.asarray(count0),
+                  jax.numpy.asarray(active0))
+        sel, count = fn(carry0, jnp_tables)
+        sel, count = np.asarray(sel), np.asarray(count)
+    return BatchReplayResult(chosen=sel[:n_lanes], count=count[:n_lanes],
+                             dispatches=1)
+
+
+def traces_from_result(tables: LaneTables, result: BatchReplayResult,
+                       configs) -> List["SearchTrace"]:
+    """Materialize per-lane :class:`tuning.cherrypick.SearchTrace`
+    objects (identical field-for-field to the sequential traces when
+    the lane reproduced the sequential decisions)."""
+    from repro.tuning.cherrypick import SearchTrace
+
+    out = []
+    for lane in range(len(tables)):
+        k = int(result.count[lane])
+        picks = result.chosen[lane, :k]
+        costs = [float(tables.cost[lane, i]) for i in picks]
+        runtimes = [float(tables.runtime[lane, i]) for i in picks]
+        limit = float(tables.limit[lane])
+        best_curve = []
+        for j in range(k):
+            valid = [c for c, r in zip(costs[: j + 1], runtimes[: j + 1])
+                     if r <= limit]
+            best_curve.append(min(valid) if valid else np.inf)
+        out.append(SearchTrace(
+            evaluated=[configs[int(i)] for i in picks], costs=costs,
+            runtimes=runtimes, best_valid_cost=best_curve,
+            search_cost=float(np.sum(costs))))
+    return out

@@ -1,0 +1,299 @@
+"""§IV-D scenario matrix over the scout simulator.
+
+A *scenario* is one configuration search: (workload, seed, tuner
+variant, fleet condition). The matrix spans the paper's evaluation grid
+— 18 workloads x seeds x {cherrypick, arrow} x {vanilla,
+perona-weighted} — extended with *fleet conditions*: degraded-node
+fleets derived from ``fleet.drift`` analytics, so fingerprint-aware
+search is exercised under exactly the degradation the paper motivates
+(a degraded machine type's fingerprint scores drop, steering the
+weighted acquisition away from it).
+
+``lane_tables`` lowers a scenario list to the stacked arrays the replay
+engine consumes; ``reference_search`` runs the identically-configured
+sequential tuner (the parity baseline). Both paths must share one
+``ScoutDataset`` instance: ``build_scenarios`` materializes the
+simulator's runtime cache in canonical (workload, config) order while
+computing runtime limits, which pins the contention-noise draws for
+every later consumer.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Mapping, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.core.ranking import machine_score_matrix, \
+    machine_score_vector
+from repro.optimizer.replay import (LaneTables, ReplayConfig, replay,
+                                    traces_from_result)
+from repro.tuning.scout import PRICES, ScoutDataset
+
+VARIANTS = ("cherrypick", "cherrypick+perona", "arrow", "arrow+perona")
+
+
+@dataclasses.dataclass(frozen=True)
+class FleetCondition:
+    """A fleet health state: relative fingerprint-score drops per
+    (machine type, resource aspect). The healthy fleet has none."""
+
+    name: str
+    score_drop: Mapping[str, Mapping[str, float]] = \
+        dataclasses.field(default_factory=dict)
+
+
+HEALTHY = FleetCondition("healthy")
+
+
+def degrade_scores(machine_scores: Dict[str, Dict[str, float]],
+                   condition: FleetCondition
+                   ) -> Dict[str, Dict[str, float]]:
+    """Apply a condition's relative drops to a machine-score dict."""
+    out = {m: dict(per) for m, per in machine_scores.items()}
+    for vm, aspects in condition.score_drop.items():
+        if vm not in out:
+            continue
+        for aspect, drop in aspects.items():
+            if aspect in out[vm]:
+                out[vm][aspect] *= (1.0 - drop)
+    return out
+
+
+def condition_from_drift(name: str, report: Dict[str, "NodeDrift"],
+                         node_types: Mapping[str, str],
+                         rel_drop: float = 0.2) -> FleetCondition:
+    """Build a condition from ``fleet.drift.drift_report`` output:
+    every drop ``fleet.drift.degradation_factors`` reports for a node
+    votes for its machine type; drops average per type."""
+    from repro.fleet.drift import degradation_factors
+
+    acc: Dict[str, Dict[str, List[float]]] = {}
+    for node, drops in degradation_factors(report, rel_drop).items():
+        vm = node_types.get(node)
+        if vm is None:
+            continue
+        for aspect, frac in drops.items():
+            acc.setdefault(vm, {}).setdefault(aspect, []).append(frac)
+    return FleetCondition(name, {
+        vm: {a: float(np.mean(v)) for a, v in per.items()}
+        for vm, per in acc.items()})
+
+
+def simulate_degraded_fleet(machine_types: Sequence[str],
+                            degraded: Mapping[str, Sequence[str]],
+                            *, severity: float = 0.9, rounds: int = 10,
+                            healthy_rounds: int = 3, seed: int = 0):
+    """Run one simulated node per machine type through streaming
+    benchmark rounds, attach synthetic quality scores that decay on the
+    ``degraded`` types' aspects over the later rounds, and return the
+    resulting ``fleet.drift`` report plus the node->type map.
+
+    This exercises the real fleet path (store appends, chain views,
+    EWMA analytics) without model training: attached codes are unit
+    vectors scaled so ``core.ranking.code_scores`` equals the intended
+    quality directly."""
+    from repro.core.ranking import ASPECT_OF_TYPE
+    from repro.fingerprint.runner import SuiteRunner
+    from repro.fleet.drift import drift_report
+    from repro.fleet.store import FingerprintStore
+
+    day = 86400.0
+    runner = SuiteRunner(seed=seed)
+    machines = {f"{vm}-0": vm for vm in machine_types}
+    store = FingerprintStore()
+    for k in range(rounds):
+        frame = runner.run_frame(machines, runs_per_type=1,
+                                 t_offset=k * day)
+        first = store.append(frame)
+        n = len(frame)
+        codes = np.zeros((n, 4), np.float32)
+        anomaly = np.full(n, 0.05, np.float32)
+        ramp = max(0.0, (k - healthy_rounds + 1)
+                   / max(rounds - healthy_rounds, 1))
+        for j in range(n):
+            vm = frame.machine_types[frame.machine_type_code[j]]
+            aspect = ASPECT_OF_TYPE[
+                frame.benchmark_types[frame.type_code[j]]]
+            quality = 1.0
+            if aspect in degraded.get(vm, ()):
+                quality = 1.0 - severity * ramp
+                anomaly[j] = 0.05 + 0.9 * ramp
+            codes[j, 0] = quality
+        store.attach(np.arange(first, first + n), anomaly, codes)
+    return drift_report(store), machines
+
+
+def drifted_condition(machine_types: Sequence[str],
+                      aspects: Sequence[str] = ("cpu",),
+                      name: Optional[str] = None,
+                      seed: int = 0) -> FleetCondition:
+    """The canonical degraded-fleet condition used by the benchmark and
+    the example: simulate the given machine types losing quality on the
+    given aspects, run the fleet drift analytics, and turn the report
+    into a condition."""
+    report, node_types = simulate_degraded_fleet(
+        machine_types, degraded={vm: tuple(aspects)
+                                 for vm in machine_types}, seed=seed)
+    if name is None:
+        name = f"{'/'.join(machine_types)}-{'/'.join(aspects)}-degraded"
+    return condition_from_drift(name, report, node_types)
+
+
+@dataclasses.dataclass(frozen=True)
+class Scenario:
+    workload: str
+    seed: int
+    variant: str  # one of VARIANTS
+    condition: FleetCondition
+    limit: float  # runtime constraint (seconds)
+
+
+def build_scenarios(ds: ScoutDataset, *,
+                    workloads: Optional[Sequence[str]] = None,
+                    seeds: Sequence[int] = (0,),
+                    variants: Sequence[str] = VARIANTS,
+                    conditions: Sequence[FleetCondition] = (HEALTHY,),
+                    limit_percentile: float = 40.0) -> List[Scenario]:
+    """Cartesian scenario matrix. Computing the per-workload runtime
+    limits materializes the simulator cache in canonical order (see
+    module docstring)."""
+    workloads = list(ds.workloads) if workloads is None else workloads
+    limits = {}
+    for wl in workloads:
+        rts, _, _ = ds.workload_arrays(wl)
+        limits[wl] = float(np.percentile(rts, limit_percentile))
+    return [Scenario(wl, seed, variant, cond, limits[wl])
+            for wl in workloads for seed in seeds
+            for variant in variants for cond in conditions]
+
+
+def _scenario_scores(scenario: Scenario, machine_scores):
+    return degrade_scores(machine_scores, scenario.condition)
+
+
+def reference_search(ds: ScoutDataset, scenario: Scenario,
+                     machine_scores: Dict[str, Dict[str, float]],
+                     cfg: Optional[ReplayConfig] = None):
+    """The sequential numpy tuner for one scenario — the parity and
+    wall-clock baseline the batched lanes are pinned against."""
+    from repro.tuning.arrow import Arrow
+    from repro.tuning.cherrypick import CherryPick
+    from repro.tuning.perona_weights import PeronaAcquisitionWeighter
+
+    cfg = ReplayConfig() if cfg is None else cfg
+    scores = _scenario_scores(scenario, machine_scores)
+    weighter = None
+    if scenario.variant.endswith("+perona"):
+        weighter = PeronaAcquisitionWeighter(
+            ds, scores, strength=cfg.strength, per_dollar=cfg.per_dollar)
+    kw = dict(max_runs=cfg.max_runs, n_init=cfg.n_init,
+              ei_threshold=cfg.ei_threshold, seed=scenario.seed,
+              acquisition_weighter=weighter)
+    if scenario.variant.startswith("arrow"):
+        low_fn = None
+        if scenario.variant == "arrow+perona":
+            low_fn = (lambda wl, c:
+                      machine_score_vector(scores, c.vm_type))
+        tuner = Arrow(ds, scenario.limit, low_level_fn=low_fn, **kw)
+    else:
+        tuner = CherryPick(ds, scenario.limit, **kw)
+    return tuner.search(scenario.workload)
+
+
+def lane_tables(ds: ScoutDataset, scenarios: Sequence[Scenario],
+                machine_scores: Dict[str, Dict[str, float]],
+                cfg: Optional[ReplayConfig] = None) -> LaneTables:
+    """Lower scenarios to the replay engine's stacked lane tables.
+
+    Feature layout is unified across variants at D = 6 base + 4
+    low-level dims; variants that do not use a block hold it constant,
+    which leaves the reference GP's kernel unchanged exactly (constant
+    dimensions median to zero pairwise distance and are floored out of
+    the length scales). Arrow's candidate rows keep the low-level block
+    at its search-start value (zeros): the sequential implementation
+    computes candidate features once, before any run is observed."""
+    from repro.tuning.perona_weights import normalized_machine_scores
+
+    cfg = ReplayConfig() if cfg is None else cfg
+    configs = ds.configs
+    n_cand = len(configs)
+    x_base = np.stack([ds.config_features(c) for c in configs])
+    prices = np.asarray([PRICES[c.vm_type] for c in configs])
+
+    workload_cache: Dict[str, Tuple] = {}
+
+    def workload_tables(wl: str):
+        if wl not in workload_cache:
+            workload_cache[wl] = ds.workload_arrays(wl)
+        return workload_cache[wl]
+
+    # keyed by object identity: distinct conditions may share a name
+    cond_cache: Dict[int, Tuple[np.ndarray, np.ndarray]] = {}
+
+    def condition_tables(cond: FleetCondition):
+        if id(cond) not in cond_cache:
+            scores = degrade_scores(machine_scores, cond)
+            norm = normalized_machine_scores(scores)
+            ns = np.stack([norm.get(c.vm_type, np.ones(4))
+                           for c in configs])
+            fp_low = machine_score_matrix(
+                scores, [c.vm_type for c in configs])
+            cond_cache[id(cond)] = (ns, fp_low)
+        return cond_cache[id(cond)]
+
+    dim = x_base.shape[1] + 4
+    n_lanes = len(scenarios)
+    tab = LaneTables(
+        x_train=np.zeros((n_lanes, n_cand, dim)),
+        x_cand=np.zeros((n_lanes, n_cand, dim)),
+        y=np.zeros((n_lanes, n_cand)),
+        runtime=np.zeros((n_lanes, n_cand)),
+        cost=np.zeros((n_lanes, n_cand)),
+        limit=np.zeros(n_lanes),
+        price=np.tile(prices, (n_lanes, 1)),
+        norm_scores=np.zeros((n_lanes, n_cand, 4)),
+        util_low=np.zeros((n_lanes, n_cand, 4)),
+        use_weighter=np.zeros(n_lanes, bool),
+        init_idx=np.zeros((n_lanes, cfg.n_init), np.int32))
+
+    base_dim = x_base.shape[1]
+    for lane, sc in enumerate(scenarios):
+        runtimes, costs, lows = workload_tables(sc.workload)
+        ns, fp_low = condition_tables(sc.condition)
+        tab.x_train[lane, :, :base_dim] = x_base
+        tab.x_cand[lane, :, :base_dim] = x_base
+        if sc.variant == "arrow":
+            # evaluated runs carry their observed low-level metrics;
+            # candidates keep the search-start zeros block
+            tab.x_train[lane, :, base_dim:] = lows
+        elif sc.variant == "arrow+perona":
+            # fingerprint scores exist before any run: both sides
+            tab.x_train[lane, :, base_dim:] = fp_low
+            tab.x_cand[lane, :, base_dim:] = fp_low
+        tab.runtime[lane] = runtimes
+        tab.cost[lane] = costs
+        tab.y[lane] = np.where(runtimes <= sc.limit, costs, costs * 5.0)
+        tab.limit[lane] = sc.limit
+        tab.norm_scores[lane] = ns
+        tab.util_low[lane] = lows
+        tab.use_weighter[lane] = sc.variant.endswith("+perona")
+        tab.init_idx[lane] = np.random.default_rng(sc.seed).choice(
+            n_cand, cfg.n_init, replace=False)
+    return tab
+
+
+def replay_scenarios(ds: ScoutDataset, scenarios: Sequence[Scenario],
+                     machine_scores: Dict[str, Dict[str, float]],
+                     cfg: Optional[ReplayConfig] = None,
+                     return_result: bool = False):
+    """End to end: lower the matrix, run the batched replay, return the
+    per-scenario :class:`SearchTrace` list (order matches input)."""
+    cfg = ReplayConfig() if cfg is None else cfg
+    tab = lane_tables(ds, scenarios, machine_scores, cfg)
+    result = replay(tab, cfg)
+    traces = traces_from_result(tab, result, ds.configs)
+    if return_result:
+        return traces, result
+    return traces

@@ -86,6 +86,13 @@ class CherryPick:
             ei = np.asarray([
                 e if c.key not in seen else -np.inf
                 for c, e in zip(configs, ei)])
+            # select on float32-rounded EI: a deterministic tie-break
+            # grid. Near-identical configurations (e.g. adjacent
+            # scaleouts of one VM type) can tie to within float64 ulps,
+            # where backend rounding differences would make the argmax
+            # arbitrary; the batched replay engine (optimizer.replay)
+            # rounds identically and reproduces these traces exactly.
+            ei = ei.astype(np.float32).astype(np.float64)
             if np.max(ei) <= 0:
                 break
             if np.max(ei) / max(best, 1e-9) < self.ei_threshold \

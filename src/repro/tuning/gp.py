@@ -19,6 +19,10 @@ class GP:
         self.y = None
 
     def _scales(self, X):
+        if len(X) < 2:
+            # single observation: every pairwise distance is zero, the
+            # median heuristic is undefined -> unit length scales
+            return np.ones(X.shape[-1])
         med = np.median(np.abs(X[:, None, :] - X[None, :, :]), axis=(0, 1))
         return np.where(med > 1e-9, med, 1.0)
 
@@ -29,7 +33,11 @@ class GP:
     def fit(self, X: np.ndarray, y: np.ndarray):
         self.X = np.asarray(X, float)
         self.y_mean = float(np.mean(y))
-        self.y_std = float(np.std(y)) or 1.0
+        # constant-y guard: a (numerically) zero spread would blow up
+        # the standardized targets; fall back to unit std
+        std = float(np.std(y))
+        self.y_std = std if std > 1e-12 * max(1.0, abs(self.y_mean)) \
+            else 1.0
         self.y = (np.asarray(y, float) - self.y_mean) / self.y_std
         self.scales = self._scales(self.X)
         K = self._k(self.X, self.X) + self.noise * np.eye(len(self.X))
@@ -47,7 +55,8 @@ class GP:
 
 
 def expected_improvement(mu, sigma, best, xi: float = 0.01):
-    """EI for *minimization*."""
+    """EI for *minimization*; non-negative by definition, so the result
+    is clipped at 0 (degenerate sigma -> the improvement itself)."""
     imp = best - mu - xi
     z = imp / np.maximum(sigma, 1e-9)
-    return imp * norm.cdf(z) + sigma * norm.pdf(z)
+    return np.maximum(imp * norm.cdf(z) + sigma * norm.pdf(z), 0.0)

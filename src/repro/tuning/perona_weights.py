@@ -17,6 +17,20 @@ from repro.core.ranking import machine_score_vector
 from repro.tuning.scout import CloudConfig, ScoutDataset
 
 
+def normalized_machine_scores(machine_scores: Dict[str, Dict[str, float]]
+                              ) -> Dict[str, np.ndarray]:
+    """Per-aspect min-max normalization (+0.1 floor) of machine score
+    vectors across types — the weighter's precomputation, shared with
+    ``optimizer.scenarios`` so batched lanes use bit-identical
+    weighting inputs."""
+    mats = {m: machine_score_vector(machine_scores, m)
+            for m in machine_scores}
+    arr = np.stack(list(mats.values()))
+    lo, hi = arr.min(0), arr.max(0)
+    rng = np.where(hi > lo, hi - lo, 1.0)
+    return {m: (v - lo) / rng + 0.1 for m, v in mats.items()}
+
+
 class PeronaAcquisitionWeighter:
     """Paper §IV-D integration: acquisition values are weighted by a sum
     of products over resource aspects — (the target workload's observed
@@ -42,12 +56,7 @@ class PeronaAcquisitionWeighter:
         self.per_dollar = per_dollar
         self.prices = PRICES
         # normalize scores across machine types per aspect
-        mats = {m: machine_score_vector(machine_scores, m)
-                for m in machine_scores}
-        arr = np.stack(list(mats.values()))
-        lo, hi = arr.min(0), arr.max(0)
-        rng = np.where(hi > lo, hi - lo, 1.0)
-        self.norm_scores = {m: (v - lo) / rng + 0.1 for m, v in mats.items()}
+        self.norm_scores = normalized_machine_scores(machine_scores)
 
     def __call__(self, configs: Sequence[CloudConfig],
                  acquisition: np.ndarray, workload: str = None,

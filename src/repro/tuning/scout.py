@@ -146,6 +146,23 @@ class ScoutDataset:
                        / max(self.runtime_s(workload, config), 1e-6))
         return np.asarray([cpu_util, mem_util, disk_util, net_util])
 
+    def workload_arrays(self, workload: str):
+        """Canonical-order materialization of one workload's tables:
+        (runtimes, costs, low-level metrics) over ``self.configs``.
+        The first call per (workload, config) pins the contention-noise
+        draw (results are cached), so sequential searches and the
+        batched replay engine see identical values as long as they
+        share one dataset instance and this runs first — which
+        ``optimizer.scenarios.build_scenarios`` guarantees by computing
+        runtime limits through it."""
+        rts = np.asarray([self.runtime_s(workload, c)
+                          for c in self.configs])
+        costs = np.asarray([self.cost_usd(workload, c)
+                            for c in self.configs])
+        lows = np.stack([self.low_level_metrics(workload, c)
+                         for c in self.configs])
+        return rts, costs, lows
+
     # --------------------------------------------------------------- views
     def config_features(self, config: CloudConfig) -> np.ndarray:
         prof = MACHINE_PROFILES[config.vm_type]

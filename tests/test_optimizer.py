@@ -1,0 +1,242 @@
+"""Batched BO replay engine: GP pinned against the scipy reference,
+per-seed trace parity with CherryPick/Arrow, Perona-weighting
+equivalence, degraded-fleet scenarios, compile amortization."""
+
+import numpy as np
+import pytest
+from _trace_utils import expect_traces
+
+from repro.optimizer import (HEALTHY, FleetCondition, ReplayConfig,
+                             REPLAY_TRACES, build_scenarios,
+                             condition_from_drift, degrade_scores,
+                             lane_tables, reference_search, replay,
+                             replay_scenarios, simulate_degraded_fleet,
+                             traces_from_result)
+from repro.tuning.scout import ScoutDataset, VM_TYPES, WORKLOAD_NAMES
+
+
+@pytest.fixture(scope="module")
+def ds():
+    return ScoutDataset(seed=0)
+
+
+@pytest.fixture(scope="module")
+def machine_scores():
+    """Deterministic fingerprint-score stand-in (scores, not model
+    quality, are under test here; the trained path is covered by
+    test_tuning)."""
+    rng = np.random.default_rng(3)
+    return {vm: {a: float(rng.uniform(0.5, 2.0))
+                 for a in ("cpu", "memory", "disk", "network")}
+            for vm in VM_TYPES}
+
+
+@pytest.fixture(scope="module")
+def degraded_condition():
+    report, node_types = simulate_degraded_fleet(
+        ("c4.large", "c4.xlarge"), degraded={"c4.large": ("cpu",),
+                                             "c4.xlarge": ("cpu",)},
+        seed=1)
+    return condition_from_drift("c4-cpu", report, node_types)
+
+
+# ------------------------------------------------------------ GP parity
+
+def test_batched_gp_matches_scipy_reference():
+    """Masked padded jnp fit/predict == dense scipy fit/predict."""
+    import jax.numpy as jnp
+    from jax.experimental import enable_x64
+
+    from repro.optimizer.gp import gp_fit, gp_predict
+    from repro.tuning.gp import GP
+
+    rng = np.random.default_rng(0)
+    with enable_x64():
+        for m in (1, 2, 3, 5, 9):
+            X = rng.normal(size=(m, 4))
+            y = rng.normal(size=m) * 3.0 + 1.0
+            Xs = rng.normal(size=(12, 4))
+            ref = GP(noise=1e-3).fit(X, y)
+            mu_ref, sd_ref = ref.predict(Xs)
+
+            P = 16
+            Xp = np.zeros((P, 4))
+            Xp[:m] = X
+            yp = np.zeros(P)
+            yp[:m] = y
+            mask = np.arange(P) < m
+            state = gp_fit(jnp.asarray(Xp), jnp.asarray(yp),
+                           jnp.asarray(mask), noise=1e-3)
+            mu, sd = gp_predict(state, jnp.asarray(Xs))
+            np.testing.assert_allclose(np.asarray(mu), mu_ref,
+                                       rtol=1e-9, atol=1e-9)
+            np.testing.assert_allclose(np.asarray(sd), sd_ref,
+                                       rtol=1e-6, atol=1e-8)
+            # length scales equal the reference's median heuristic
+            np.testing.assert_allclose(np.asarray(state.scales),
+                                       ref.scales, rtol=0, atol=0)
+
+
+def test_batched_ei_matches_numpy():
+    import jax.numpy as jnp
+    from jax.experimental import enable_x64
+
+    from repro.optimizer.acquire import expected_improvement as ei_jnp
+    from repro.tuning.gp import expected_improvement as ei_np
+
+    rng = np.random.default_rng(1)
+    mu = rng.normal(size=50)
+    sigma = np.abs(rng.normal(size=50)) + 1e-3
+    with enable_x64():
+        got = np.asarray(ei_jnp(jnp.asarray(mu), jnp.asarray(sigma),
+                                0.3))
+    ref = ei_np(mu, sigma, 0.3)
+    np.testing.assert_allclose(got, ref, rtol=1e-12, atol=1e-15)
+    assert np.all(ref >= 0) and np.all(got >= 0)
+
+
+# --------------------------------------------------------- trace parity
+
+def _assert_trace_equal(seq, bat, scenario):
+    label = (scenario.workload, scenario.seed, scenario.variant,
+             scenario.condition.name)
+    assert [c.key for c in seq.evaluated] == \
+        [c.key for c in bat.evaluated], label
+    assert seq.best_valid_cost == bat.best_valid_cost, label
+    assert seq.costs == bat.costs, label
+    assert seq.runtimes == bat.runtimes, label
+    assert seq.search_cost == bat.search_cost, label
+
+
+def test_replay_matches_sequential_traces(ds, machine_scores,
+                                          degraded_condition):
+    """The acceptance criterion: every lane reproduces its sequential
+    numpy search exactly — same evaluated configs, same
+    best-valid-cost curve — across variants, seeds and conditions."""
+    scens = build_scenarios(
+        ds, workloads=WORKLOAD_NAMES[:3], seeds=(0, 1),
+        conditions=(HEALTHY, degraded_condition))
+    traces = replay_scenarios(ds, scens, machine_scores)
+    assert len(traces) == len(scens) == 3 * 2 * 4 * 2
+    for sc, bt in zip(scens, traces):
+        _assert_trace_equal(reference_search(ds, sc, machine_scores),
+                            bt, sc)
+
+
+def test_perona_lanes_reproduce_weighter_rankings(ds, machine_scores):
+    """The pure-array weighting reproduces the sequential
+    ``PeronaAcquisitionWeighter`` bit-for-bit on the same inputs."""
+    import jax.numpy as jnp
+    from jax.experimental import enable_x64
+
+    from repro.core.ranking import machine_score_matrix
+    from repro.optimizer.acquire import perona_weight_factors
+    from repro.tuning.perona_weights import (PeronaAcquisitionWeighter,
+                                             normalized_machine_scores)
+    from repro.tuning.scout import PRICES
+
+    weighter = PeronaAcquisitionWeighter(ds, machine_scores)
+    wl = WORKLOAD_NAMES[0]
+    evaluated = [ds.configs[i] for i in (3, 17, 40)]
+    rng = np.random.default_rng(0)
+    acq = np.abs(rng.normal(size=len(ds.configs)))
+    ref = weighter(ds.configs, acq, workload=wl, evaluated=evaluated,
+                   any_valid=True)
+
+    norm = normalized_machine_scores(machine_scores)
+    ns = np.stack([norm[c.vm_type] for c in ds.configs])
+    prices = np.asarray([PRICES[c.vm_type] for c in ds.configs])
+    util = np.mean([ds.low_level_metrics(wl, c) for c in evaluated],
+                   axis=0)
+    with enable_x64():
+        factors = np.asarray(perona_weight_factors(
+            jnp.asarray(util), jnp.asarray(ns), jnp.asarray(prices),
+            True))
+    got = acq * factors
+    np.testing.assert_allclose(got, ref, rtol=1e-12)
+    np.testing.assert_array_equal(np.argsort(got), np.argsort(ref))
+    # the weighter's normalized machine-score vectors are exactly the
+    # batched matrix rows (core.ranking batched-input form)
+    mats = machine_score_matrix(machine_scores, list(machine_scores))
+    assert mats.shape == (len(machine_scores), 4)
+    for i, vm in enumerate(machine_scores):
+        np.testing.assert_array_equal(
+            weighter.norm_scores[vm], norm[vm])
+
+
+def test_degraded_condition_changes_search(ds, machine_scores,
+                                           degraded_condition):
+    """Degrading a machine type's fingerprint must actually steer the
+    weighted lanes: scores drop for the degraded type and the scenario
+    matrix produces at least one different trace vs healthy."""
+    degraded = degrade_scores(machine_scores, degraded_condition)
+    assert degraded["c4.large"]["cpu"] < machine_scores["c4.large"]["cpu"]
+    assert degraded["c4.large"]["memory"] == \
+        machine_scores["c4.large"]["memory"]
+    healthy = build_scenarios(ds, workloads=WORKLOAD_NAMES[:6],
+                              seeds=(0,),
+                              variants=("cherrypick+perona",),
+                              conditions=(HEALTHY,))
+    sick = build_scenarios(ds, workloads=WORKLOAD_NAMES[:6],
+                           seeds=(0,),
+                           variants=("cherrypick+perona",),
+                           conditions=(degraded_condition,))
+    t_h = replay_scenarios(ds, healthy, machine_scores)
+    t_s = replay_scenarios(ds, sick, machine_scores)
+    assert any([c.key for c in a.evaluated] !=
+               [c.key for c in b.evaluated]
+               for a, b in zip(t_h, t_s))
+
+
+def test_distinct_conditions_sharing_a_name(ds, machine_scores):
+    """Condition tables cache by object, not by name: two different
+    conditions named alike must produce different lane tables."""
+    cfg = ReplayConfig()
+    a = FleetCondition("degraded", {"c4.large": {"cpu": 0.5}})
+    b = FleetCondition("degraded", {"r4.large": {"disk": 0.5}})
+    scens = build_scenarios(ds, workloads=WORKLOAD_NAMES[:1],
+                            seeds=(0,), variants=("cherrypick+perona",),
+                            conditions=(a, b))
+    tab = lane_tables(ds, scens, machine_scores, cfg)
+    assert not np.array_equal(tab.norm_scores[0], tab.norm_scores[1])
+
+
+def test_replay_compile_amortized(ds, machine_scores):
+    """Same lane/slot shapes -> one tracing total (donated-carry scan
+    is reused; REPLAY_TRACES is the shared TraceCount pattern)."""
+    cfg = ReplayConfig()
+    scens = build_scenarios(ds, workloads=WORKLOAD_NAMES[:2],
+                            seeds=(0, 1), conditions=(HEALTHY,))
+    tab = lane_tables(ds, scens, machine_scores, cfg)
+    replay(tab, cfg)  # compile (or reuse an earlier test's program)
+    with expect_traces(REPLAY_TRACES, 0):
+        r1 = replay(tab, cfg)
+        r2 = replay(tab, cfg)
+    np.testing.assert_array_equal(r1.chosen, r2.chosen)
+    assert r1.dispatches == 1
+
+
+def test_traces_from_result_fields(ds, machine_scores):
+    """Replayed SearchTrace bookkeeping is self-consistent: costs and
+    runtimes come from the lane tables, the best-valid curve is the
+    running min over valid runs, search_cost sums the costs."""
+    cfg = ReplayConfig()
+    scens = build_scenarios(ds, workloads=WORKLOAD_NAMES[:1],
+                            seeds=(0,), conditions=(HEALTHY,))
+    tab = lane_tables(ds, scens, machine_scores, cfg)
+    result = replay(tab, cfg)
+    traces = traces_from_result(tab, result, ds.configs)
+    for sc, tr in zip(scens, traces):
+        assert len(tr.evaluated) == len(tr.costs) == len(tr.runtimes) \
+            == len(tr.best_valid_cost)
+        assert cfg.n_init <= len(tr.evaluated) <= cfg.max_runs
+        assert tr.search_cost == float(np.sum(tr.costs))
+        running = np.inf
+        for cost, rt, best in zip(tr.costs, tr.runtimes,
+                                  tr.best_valid_cost):
+            if rt <= sc.limit:
+                running = min(running, cost)
+            assert best == running
+        # no config evaluated twice
+        keys = [c.key for c in tr.evaluated]
+        assert len(keys) == len(set(keys))

@@ -136,6 +136,66 @@ def test_next_pow2_idempotent_on_powers_of_two(k, floor):
     assert next_pow2(b, floor) == b
 
 
+@settings(max_examples=40, deadline=None)
+@given(st.integers(0, 10_000), st.floats(-5.0, 5.0))
+def test_expected_improvement_nonnegative(seed, best):
+    """EI is an expectation of a nonnegative quantity — it must never
+    go negative, including for degenerate (zero/tiny) sigma."""
+    from repro.tuning.gp import expected_improvement
+
+    rng = np.random.default_rng(seed)
+    mu = rng.normal(scale=3.0, size=32)
+    sigma = np.abs(rng.normal(size=32))
+    sigma[:4] = 0.0  # degenerate: no posterior uncertainty
+    ei = expected_improvement(mu, sigma, best)
+    assert np.all(np.isfinite(ei))
+    assert np.all(ei >= 0.0)
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.integers(0, 10_000), st.integers(2, 12))
+def test_gp_kernel_psd_under_jitter(seed, n):
+    """The jittered RBF kernel matrix the GP factorizes must stay
+    positive definite — including duplicated rows (rank-deficient
+    without the noise term)."""
+    from repro.tuning.gp import GP
+
+    rng = np.random.default_rng(seed)
+    X = rng.normal(size=(n, 3))
+    X[-1] = X[0]  # duplicate -> singular kernel without jitter
+    gp = GP(noise=1e-3)
+    gp.scales = gp._scales(X)
+    K = gp._k(X, X) + gp.noise * np.eye(n)
+    assert np.linalg.eigvalsh(K).min() > 0
+    # and the full fit goes through the Cholesky without blowing up
+    gp.fit(X, rng.normal(size=n))
+    mu, sd = gp.predict(X)
+    assert np.all(np.isfinite(mu)) and np.all(np.isfinite(sd))
+
+
+def test_gp_degenerate_inputs():
+    """Single observation and constant-y fits must stay finite (the
+    median length-scale heuristic and standardization guards)."""
+    from repro.tuning.gp import GP, expected_improvement
+
+    # single observation: median heuristic undefined -> unit scales
+    gp = GP().fit(np.asarray([[1.0, 2.0]]), np.asarray([3.0]))
+    np.testing.assert_array_equal(gp.scales, np.ones(2))
+    mu, sd = gp.predict(np.asarray([[1.0, 2.0], [5.0, -1.0]]))
+    assert np.all(np.isfinite(mu)) and np.all(np.isfinite(sd))
+    np.testing.assert_allclose(mu[0], 3.0, atol=1e-2)
+
+    # constant y: zero spread -> unit std, not a division blow-up
+    X = np.asarray([[0.0, 0.0], [1.0, 0.5], [2.0, 1.0]])
+    gp = GP().fit(X, np.full(3, 0.1))
+    assert gp.y_std == 1.0
+    mu, sd = gp.predict(X)
+    assert np.all(np.isfinite(mu)) and np.all(np.isfinite(sd))
+    np.testing.assert_allclose(mu, 0.1, atol=1e-2)
+    ei = expected_improvement(mu, sd, best=float(mu.min()))
+    assert np.all(ei >= 0.0)
+
+
 def test_elastic_reshard_roundtrip():
     """reshard_tree re-resolves divisibility on the new mesh and keeps
     values intact (single-device meshes here; multi-device resolution is
