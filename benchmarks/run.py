@@ -44,8 +44,19 @@ def main() -> None:
     ap.add_argument("--optimizer-json-out",
                     default="BENCH_optimizer.json",
                     help="where to write the optimizer rows as JSON")
+    ap.add_argument("--devices", type=int, default=0,
+                    help="force N virtual host devices (sets "
+                         "--xla_force_host_platform_device_count "
+                         "before jax initializes; exercises the "
+                         "sharded/pipelined multi-device rows on CPU)")
     args = ap.parse_args()
     quick = args.quick or args.smoke
+    if args.devices > 0:
+        # must land in XLA_FLAGS before the first jax import
+        flags = os.environ.get("XLA_FLAGS", "")
+        os.environ["XLA_FLAGS"] = (
+            f"{flags} --xla_force_host_platform_device_count="
+            f"{args.devices}").strip()
 
     from benchmarks import (bench_fingerprint, bench_fleet,
                             bench_kernels, bench_optimizer,

@@ -2,12 +2,18 @@
 Perona-weighted acquisition — replayed through the batched BO engine.
 
 The scenario matrix (workload x tuner variant x fleet condition) runs
-as parallel vmapped GP lanes in one scanned device dispatch
-(``repro.optimizer``); every lane reproduces the sequential
-CherryPick/Arrow trace exactly, so the printed results are the paper's
-comparison at a fraction of the wall clock (see BENCH_optimizer.json).
+as parallel vmapped GP lanes — sharded over every available device and
+host-pipelined in fixed-size lane blocks (``repro.optimizer``); every
+lane reproduces the sequential CherryPick/Arrow trace exactly, so the
+printed results are the paper's comparison at a fraction of the wall
+clock (see BENCH_optimizer.json).
 
     PYTHONPATH=src python examples/resource_tuning.py
+
+Add virtual devices to exercise the mesh on a CPU-only box:
+
+    XLA_FLAGS=--xla_force_host_platform_device_count=8 \\
+        PYTHONPATH=src python examples/resource_tuning.py
 """
 
 import time
@@ -15,7 +21,7 @@ import time
 import numpy as np
 
 from repro.optimizer import (HEALTHY, build_scenarios, drifted_condition,
-                             replay_scenarios)
+                             replay_pipelined)
 from repro.optimizer.scenarios import VARIANTS
 from repro.tuning.perona_weights import fingerprint_machine_scores
 from repro.tuning.scout import VM_TYPES, ScoutDataset, WORKLOAD_NAMES
@@ -37,15 +43,23 @@ def main():
     degraded = drifted_condition(
         ("c4.large", "c4.xlarge", "c4.2xlarge"), name="c4-cpu-degraded")
 
+    import jax
+
     workloads = WORKLOAD_NAMES[:4]
     scens = build_scenarios(ds, workloads=workloads, seeds=(1,),
                             conditions=(HEALTHY, degraded))
     t0 = time.perf_counter()
-    traces = replay_scenarios(ds, scens, scores)
+    traces, stats = replay_pipelined(ds, scens, scores,
+                                     block_lanes=16,
+                                     devices=jax.devices(),
+                                     return_stats=True)
     dt = time.perf_counter() - t0
     print(f"replayed {len(scens)} searches "
           f"({len(workloads)} workloads x {len(VARIANTS)} variants x "
-          f"2 fleet conditions) in {dt:.2f}s — one scanned dispatch\n")
+          f"2 fleet conditions) in {dt:.2f}s — "
+          f"{stats['blocks']} pipelined blocks of "
+          f"{stats['block_lanes']} lanes over "
+          f"{len(jax.devices())} device(s)\n")
 
     by_key = {(s.workload, s.variant, s.condition.name): t
               for s, t in zip(scens, traces)}

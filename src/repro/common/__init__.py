@@ -1,6 +1,16 @@
-"""Shared low-level utilities: pytree helpers, registries, logging."""
+"""Shared low-level utilities: pytree helpers, registries, logging,
+shape bucketing and 1-D device-mesh plumbing."""
 
 from repro.common.bucketing import next_pow2
+from repro.common.mesh import (
+    axis_specs,
+    build_mesh,
+    pad_lanes,
+    pow2_devices,
+    shard_map_1d,
+    shard_size,
+    stack_padded,
+)
 from repro.common.tree import (
     tree_zeros_like,
     tree_add,
@@ -13,6 +23,13 @@ from repro.common.registry import Registry
 
 __all__ = [
     "next_pow2",
+    "axis_specs",
+    "build_mesh",
+    "pad_lanes",
+    "pow2_devices",
+    "shard_map_1d",
+    "shard_size",
+    "stack_padded",
     "tree_zeros_like",
     "tree_add",
     "tree_scale",

@@ -45,6 +45,7 @@ from typing import Dict, List, Optional, Sequence
 import numpy as np
 
 from repro.common.bucketing import next_pow2
+from repro.common.mesh import stack_padded
 from repro.core.graph_data import chain_structure
 from repro.core.model import PeronaModel
 from repro.core.preprocess import Preprocessor
@@ -179,13 +180,8 @@ class FleetScoringService:
         for req in requests:
             buckets.setdefault(req["bucket"], []).append(req)
         for bucket, group in buckets.items():
-            r_pad = self.scorer.pad_requests(len(group))
-            g0 = group[0]["inputs"]
-            stack = {k: np.zeros((r_pad,) + g0[k].shape, g0[k].dtype)
-                     for k in g0}
-            for r, req in enumerate(group):
-                for k, v in req["inputs"].items():
-                    stack[k][r] = v
+            stack = stack_padded([req["inputs"] for req in group],
+                                 self.scorer.pad_requests(len(group)))
             out = self.scorer.score_stack(self.params, stack)
             self._dispatches += 1
             for r, req in enumerate(group):

@@ -20,23 +20,15 @@ axis only, so the sharded scores are bit-identical
 
 from __future__ import annotations
 
-from typing import Dict, List, Optional, Sequence
+from typing import Dict, Optional, Sequence
 
 import numpy as np
 
-from repro.common.bucketing import next_pow2
+from repro.common.mesh import (axis_specs, build_mesh, shard_map_1d,
+                               shard_size)
 from repro.core.model import PeronaModel
 from repro.core.preprocess import Preprocessor
 from repro.serving.engine import ARG_NAMES, make_score_fn
-
-
-def _pow2_devices(devices: Sequence) -> List:
-    """Largest power-of-two prefix of the device list (keeps the padded
-    pow2 request axis divisible by the mesh size)."""
-    n = 1
-    while n * 2 <= len(devices):
-        n *= 2
-    return list(devices[:n])
 
 
 class ShardedScorer:
@@ -45,16 +37,10 @@ class ShardedScorer:
     def __init__(self, model: PeronaModel, preproc: Preprocessor,
                  devices: Optional[Sequence] = None):
         import jax
-        from jax.sharding import Mesh, PartitionSpec as P
-        try:  # stable API (newer jax)
-            from jax import shard_map
-        except ImportError:  # jax <= 0.4/0.5
-            from jax.experimental.shard_map import shard_map
+        from jax.sharding import PartitionSpec as P
 
-        devices = _pow2_devices(devices if devices is not None
-                                else jax.devices())
-        self.mesh = Mesh(np.asarray(devices), ("fleet",))
-        self.n_devices = len(devices)
+        self.mesh = build_mesh("fleet", devices)
+        self.n_devices = self.mesh.devices.size
         self._trace_count = 0
 
         def on_trace():
@@ -62,13 +48,10 @@ class ShardedScorer:
 
         fn = make_score_fn(model, preproc, on_trace=on_trace)
         vmapped = jax.vmap(fn, in_axes=(None,) + (0,) * len(ARG_NAMES))
-        specs = dict(mesh=self.mesh,
-                     in_specs=(P(),) + (P("fleet"),) * len(ARG_NAMES),
-                     out_specs=P("fleet"))
-        try:
-            sharded = shard_map(vmapped, check_rep=False, **specs)
-        except TypeError:  # newer jax dropped/renamed check_rep
-            sharded = shard_map(vmapped, **specs)
+        sharded = shard_map_1d(
+            vmapped, self.mesh,
+            in_specs=axis_specs("fleet", len(ARG_NAMES), n_const=1),
+            out_specs=P("fleet"))
         # stacked request buffers are rebuilt per flush: donate them
         self.donate_argnums = tuple(range(1, 1 + len(ARG_NAMES)))
         self._call = jax.jit(sharded,
@@ -81,7 +64,7 @@ class ShardedScorer:
 
     def pad_requests(self, n_requests: int) -> int:
         """Power-of-two request-axis size, divisible by the mesh."""
-        return next_pow2(n_requests, self.n_devices)
+        return shard_size(n_requests, self.n_devices)
 
     def score_stack(self, params, stack: Dict[str, np.ndarray]
                     ) -> Dict[str, np.ndarray]:

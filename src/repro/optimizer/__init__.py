@@ -9,27 +9,36 @@ configuration searches as parallel vmapped lanes on device:
 - :mod:`repro.optimizer.acquire` — expected improvement and the §IV-D
   Perona acquisition weighting as pure array ops;
 - :mod:`repro.optimizer.replay` — full BO search loops as one
-  ``lax.scan`` over rounds, every lane advanced per round;
+  ``lax.scan`` over rounds, every lane advanced per round; the lane
+  axis optionally sharded over a 1-D device mesh (``common.mesh``),
+  bit-identical to the single-device scan;
 - :mod:`repro.optimizer.scenarios` — the §IV-D scenario matrix
   (workload x seed x tuner variant x fleet condition) over the scout
-  simulator, including degraded-node fleets from ``fleet.drift``.
+  simulator, including degraded-node fleets from ``fleet.drift``, plus
+  ``replay_pipelined``: fixed-size lane blocks whose host-side table
+  construction overlaps the previous block's device scan.
 """
 
 from repro.optimizer.replay import (REPLAY_TRACES, BatchReplayResult,
-                                    ReplayConfig, replay,
-                                    traces_from_result)
-from repro.optimizer.scenarios import (HEALTHY, FleetCondition, Scenario,
+                                    PendingReplay, ReplayConfig, replay,
+                                    replay_async, traces_from_result)
+from repro.optimizer.scenarios import (HEALTHY, DeferredFleetCondition,
+                                       FleetCondition, Scenario,
                                        build_scenarios,
                                        condition_from_drift,
                                        degrade_scores, drifted_condition,
                                        lane_tables, reference_search,
+                                       replay_pipelined,
                                        replay_scenarios,
+                                       resolve_condition,
                                        simulate_degraded_fleet)
 
 __all__ = [
-    "REPLAY_TRACES", "BatchReplayResult", "ReplayConfig", "replay",
-    "traces_from_result", "HEALTHY", "FleetCondition", "Scenario",
+    "REPLAY_TRACES", "BatchReplayResult", "PendingReplay",
+    "ReplayConfig", "replay", "replay_async", "traces_from_result",
+    "HEALTHY", "DeferredFleetCondition", "FleetCondition", "Scenario",
     "build_scenarios", "condition_from_drift", "degrade_scores",
     "drifted_condition", "lane_tables", "reference_search",
-    "replay_scenarios", "simulate_degraded_fleet",
+    "replay_pipelined", "replay_scenarios", "resolve_condition",
+    "simulate_degraded_fleet",
 ]

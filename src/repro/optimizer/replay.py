@@ -1,4 +1,5 @@
-"""Vmapped BO search lanes as one ``lax.scan`` over rounds.
+"""Vmapped BO search lanes as one ``lax.scan`` over rounds — optionally
+sharded over a 1-D device mesh.
 
 Replays many CherryPick/Arrow-style configuration searches (paper
 §IV-D) in parallel: every *lane* is one (workload, seed, tuner variant,
@@ -7,9 +8,26 @@ advances every still-active lane by one BO round (masked GP fit on the
 lane's evaluated set, EI + optional Perona weighting, stopping rules,
 argmax selection). The whole search is a single device dispatch —
 carries are donated, lanes and observation slots are pow2-padded
-(``common.bucketing.next_pow2``) so repeated replays of similar
-matrices reuse one compiled program (``REPLAY_TRACES`` counts
-tracings; tests assert amortization).
+(``common.mesh.shard_size``) so repeated replays of similar matrices
+reuse one compiled program (``REPLAY_TRACES`` counts tracings; tests
+assert amortization).
+
+Pass ``devices=`` to partition the lane axis across a device mesh
+(``common.mesh`` plumbing, the ``fleet.shard`` pattern):
+``shard_map(vmap(step))`` gives every device its own lane bucket, the
+scan runs once per device over local lanes, and carries stay donated.
+Lanes never interact, so sharded replay is *bit-identical* to the
+single-device scan — and therefore to the sequential scipy traces
+(asserted under ``XLA_FLAGS=--xla_force_host_platform_device_count=8``
+in tests/test_optimizer.py).
+
+``replay_async`` dispatches and defers the host fetch
+(:class:`PendingReplay`) — a real overlap window on asynchronous
+backends (GPU/TPU dispatch returns before compute finishes). XLA:CPU
+executes synchronously, so there ``scenarios.replay_pipelined``
+produces the overlap instead: per-device worker threads run this same
+entry point while the main thread builds the next lane block's
+tables.
 
 All math runs in float64 (``jax.experimental.enable_x64`` around the
 dispatch) so batched lanes reproduce the sequential scipy traces
@@ -21,11 +39,13 @@ from __future__ import annotations
 
 import dataclasses
 import functools
-from typing import List, Optional
+import threading
+from typing import List, Optional, Sequence, Tuple
 
 import numpy as np
 
-from repro.common.bucketing import next_pow2
+from repro.common.mesh import (axis_specs, build_mesh, pad_lanes,
+                               pow2_devices, shard_map_1d, shard_size)
 from repro.core.trainer import TraceCount
 
 #: Ticked once per tracing of the scanned replay program.
@@ -127,10 +147,28 @@ def _lane_step(sel, count, active, xt, xc, y_tab, r_tab, ulow, ns,
     return sel, count, advance
 
 
+#: Number of stacked lane-table arrays a replay dispatch consumes.
+N_TABLES = 9
+
+# first call per program signature traces + compiles; concurrent cold
+# calls from the pipelined per-device workers would each do so (jax
+# does not dedupe concurrent first-call tracing) — serialize only the
+# cold call, warm dispatches stay lock-free
+_COMPILED_SIGNATURES: set = set()
+_COMPILE_LOCK = threading.Lock()
+
+
 @functools.lru_cache(maxsize=32)
 def _replay_fn(cfg: ReplayConfig, lanes: int, slots: int, n_cand: int,
-               dim: int, rounds: int):
-    """Jitted scan program for one (config, shape) signature."""
+               dim: int, rounds: int,
+               devices: Optional[Tuple] = None):
+    """Jitted scan program for one (config, shape, mesh) signature.
+
+    ``devices=None`` is the single-device program. A device tuple
+    shards the lane axis: each device scans its own
+    ``lanes/len(devices)`` lane bucket (``shard_map`` around the
+    vmapped step), one dispatch total.
+    """
     import jax
 
     step = functools.partial(_lane_step, cfg=cfg, slots=slots)
@@ -148,31 +186,74 @@ def _replay_fn(cfg: ReplayConfig, lanes: int, slots: int, n_cand: int,
                                           length=rounds)
         return sel, count
 
+    if devices is not None and len(devices) > 1:
+        mesh = build_mesh("lanes", devices)
+        lane = axis_specs("lanes", 1)[0]
+        run = shard_map_1d(run, mesh,
+                           in_specs=((lane,) * 3, (lane,) * N_TABLES),
+                           out_specs=(lane, lane))
     return jax.jit(run, donate_argnums=(0,))
 
 
-def replay(tables: LaneTables,
-           cfg: Optional[ReplayConfig] = None) -> BatchReplayResult:
-    """Run every lane's full search as one scanned device dispatch."""
+@dataclasses.dataclass
+class PendingReplay:
+    """A dispatched-but-not-fetched replay: ``sel``/``count`` may still
+    be device arrays (jax async dispatch); :meth:`result` blocks."""
+
+    n_lanes: int
+    dispatches: int
+    _sel: object
+    _count: object
+
+    def result(self) -> BatchReplayResult:
+        sel = np.asarray(self._sel)[: self.n_lanes]
+        count = np.asarray(self._count)[: self.n_lanes]
+        return BatchReplayResult(chosen=sel, count=count,
+                                 dispatches=self.dispatches)
+
+
+def replay_async(tables: LaneTables,
+                 cfg: Optional[ReplayConfig] = None, *,
+                 devices: Optional[Sequence] = None,
+                 device=None,
+                 lanes_floor: int = 1) -> PendingReplay:
+    """Dispatch every lane's full search as one (optionally sharded)
+    scanned device call and return without blocking on the outputs.
+
+    ``devices``: shard the lane axis over these devices (pow2 prefix;
+    ``None`` keeps the single-device program). ``device``: place the
+    single-device program's inputs on that device instead of the
+    default — ``replay_pipelined`` round-robins lane blocks over the
+    devices this way, so blocks execute concurrently as independent
+    per-device dispatches. ``lanes_floor``: minimum padded lane-bucket
+    size (a power of two) — fixed-size lane blocks let differing
+    matrix sizes reuse one compiled program (see
+    ``scenarios.replay_pipelined``).
+    """
     import jax
     from jax.experimental import enable_x64
 
     cfg = ReplayConfig() if cfg is None else cfg
+    if devices is not None and device is not None:
+        raise ValueError("pass either devices= (shard_map) or "
+                         "device= (placement), not both")
     n_lanes = len(tables)
     if n_lanes == 0:
-        return BatchReplayResult(
-            chosen=np.zeros((0, cfg.max_runs), np.int32),
-            count=np.zeros(0, np.int32), dispatches=0)
-    lanes = next_pow2(n_lanes)
-    slots = next_pow2(cfg.max_runs)
+        return PendingReplay(
+            n_lanes=0, dispatches=0,
+            _sel=np.zeros((0, cfg.max_runs), np.int32),
+            _count=np.zeros(0, np.int32))
+    devs = tuple(pow2_devices(devices)) if devices is not None else None
+    if devs is not None and len(devs) <= 1:
+        devs = None  # same un-sharded program: share its cache entry
+    n_dev = len(devs) if devs else 1
+    lanes = shard_size(n_lanes, n_dev, floor=lanes_floor)
+    slots = shard_size(cfg.max_runs)
     n_cand, dim = tables.x_train.shape[1:]
     rounds = cfg.max_runs - cfg.n_init
 
     def pad(a):  # pad the lane axis by repeating lane 0 (masked out)
-        if len(a) == lanes:
-            return a
-        reps = np.repeat(a[:1], lanes - len(a), axis=0)
-        return np.concatenate([a, reps], axis=0)
+        return pad_lanes(a, lanes)
 
     sel0 = np.full((lanes, cfg.max_runs), -1, np.int32)
     sel0[:, : cfg.n_init] = pad(tables.init_idx)
@@ -181,48 +262,83 @@ def replay(tables: LaneTables,
 
     from repro.serving.engine import silence_unusable_donation
 
-    fn = _replay_fn(cfg, lanes, slots, n_cand, dim, rounds)
+    fn = _replay_fn(cfg, lanes, slots, n_cand, dim, rounds, devs)
+
+    def to_dev(a):
+        if device is not None:
+            return jax.device_put(a, device)
+        return jax.numpy.asarray(a)
+
     with enable_x64(), silence_unusable_donation():
+        # copy=False: lane_tables already builds f64 columns, so the
+        # dtype casts are no-ops for the common path
         jnp_tables = tuple(
-            jax.numpy.asarray(pad(a)) for a in (
-                tables.x_train.astype(np.float64),
-                tables.x_cand.astype(np.float64),
-                tables.y.astype(np.float64),
-                tables.runtime.astype(np.float64),
-                tables.util_low.astype(np.float64),
-                tables.norm_scores.astype(np.float64),
-                tables.price.astype(np.float64),
-                tables.limit.astype(np.float64),
-                tables.use_weighter.astype(bool)))
-        carry0 = (jax.numpy.asarray(sel0), jax.numpy.asarray(count0),
-                  jax.numpy.asarray(active0))
-        sel, count = fn(carry0, jnp_tables)
-        sel, count = np.asarray(sel), np.asarray(count)
-    return BatchReplayResult(chosen=sel[:n_lanes], count=count[:n_lanes],
-                             dispatches=1)
+            to_dev(pad(a)) for a in (
+                tables.x_train.astype(np.float64, copy=False),
+                tables.x_cand.astype(np.float64, copy=False),
+                tables.y.astype(np.float64, copy=False),
+                tables.runtime.astype(np.float64, copy=False),
+                tables.util_low.astype(np.float64, copy=False),
+                tables.norm_scores.astype(np.float64, copy=False),
+                tables.price.astype(np.float64, copy=False),
+                tables.limit.astype(np.float64, copy=False),
+                tables.use_weighter.astype(bool, copy=False)))
+        carry0 = (to_dev(sel0), to_dev(count0), to_dev(active0))
+        # keyed on placement too: each device's first call compiles
+        # its own executable and must take the serialized branch
+        sig = (cfg, lanes, slots, n_cand, dim, rounds, devs, device)
+        if sig in _COMPILED_SIGNATURES:
+            sel, count = fn(carry0, jnp_tables)
+        else:
+            with _COMPILE_LOCK:
+                sel, count = fn(carry0, jnp_tables)
+                _COMPILED_SIGNATURES.add(sig)
+    return PendingReplay(n_lanes=n_lanes, dispatches=1,
+                         _sel=sel, _count=count)
+
+
+def replay(tables: LaneTables,
+           cfg: Optional[ReplayConfig] = None, *,
+           devices: Optional[Sequence] = None,
+           lanes_floor: int = 1) -> BatchReplayResult:
+    """Run every lane's full search as one scanned device dispatch
+    (sharded over ``devices`` when given) and fetch the result."""
+    return replay_async(tables, cfg, devices=devices,
+                        lanes_floor=lanes_floor).result()
 
 
 def traces_from_result(tables: LaneTables, result: BatchReplayResult,
                        configs) -> List["SearchTrace"]:
     """Materialize per-lane :class:`tuning.cherrypick.SearchTrace`
     objects (identical field-for-field to the sequential traces when
-    the lane reproduced the sequential decisions)."""
+    the lane reproduced the sequential decisions).
+
+    Vectorized across lanes (one gather + running-min per field): the
+    per-lane python work is just the object construction, which keeps
+    trace materialization cheap enough to overlap with device scans in
+    the pipelined path."""
     from repro.tuning.cherrypick import SearchTrace
 
+    n = len(tables)
+    if n == 0:
+        return []
+    picks_all = result.chosen[:n]
+    idx = np.maximum(picks_all, 0)
+    costs_all = np.take_along_axis(tables.cost, idx, axis=1)
+    runtimes_all = np.take_along_axis(tables.runtime, idx, axis=1)
+    valid = runtimes_all <= tables.limit[:, None]
+    # running min over valid runs only; lanes with no valid run yet
+    # stay at +inf (the sequential bookkeeping)
+    best_all = np.minimum.accumulate(
+        np.where(valid, costs_all, np.inf), axis=1)
+
     out = []
-    for lane in range(len(tables)):
+    for lane in range(n):
         k = int(result.count[lane])
-        picks = result.chosen[lane, :k]
-        costs = [float(tables.cost[lane, i]) for i in picks]
-        runtimes = [float(tables.runtime[lane, i]) for i in picks]
-        limit = float(tables.limit[lane])
-        best_curve = []
-        for j in range(k):
-            valid = [c for c, r in zip(costs[: j + 1], runtimes[: j + 1])
-                     if r <= limit]
-            best_curve.append(min(valid) if valid else np.inf)
         out.append(SearchTrace(
-            evaluated=[configs[int(i)] for i in picks], costs=costs,
-            runtimes=runtimes, best_valid_cost=best_curve,
-            search_cost=float(np.sum(costs))))
+            evaluated=[configs[int(i)] for i in picks_all[lane, :k]],
+            costs=costs_all[lane, :k].tolist(),
+            runtimes=runtimes_all[lane, :k].tolist(),
+            best_valid_cost=best_all[lane, :k].tolist(),
+            search_cost=float(np.sum(costs_all[lane, :k]))))
     return out

@@ -21,14 +21,16 @@ every later consumer.
 from __future__ import annotations
 
 import dataclasses
+import time
 from typing import Dict, List, Mapping, Optional, Sequence, Tuple
 
 import numpy as np
 
+from repro.common.bucketing import next_pow2
 from repro.core.ranking import machine_score_matrix, \
     machine_score_vector
 from repro.optimizer.replay import (LaneTables, ReplayConfig, replay,
-                                    traces_from_result)
+                                    replay_async, traces_from_result)
 from repro.tuning.scout import PRICES, ScoutDataset
 
 VARIANTS = ("cherrypick", "cherrypick+perona", "arrow", "arrow+perona")
@@ -47,10 +49,44 @@ class FleetCondition:
 HEALTHY = FleetCondition("healthy")
 
 
+class DeferredFleetCondition:
+    """A fleet condition whose score drops are derived on first use —
+    typically through the real store path (``simulate_degraded_fleet``
+    -> ``fleet.drift`` EWMAs -> ``condition_from_drift``), which costs
+    real host time. ``replay_pipelined`` exploits the laziness: with a
+    condition-major scenario order (``build_scenarios(
+    condition_major=True)``) each block's conditions are derived on the
+    host while the previous block's scan runs on device."""
+
+    def __init__(self, name: str, factory):
+        self.name = name
+        self._factory = factory
+        self._resolved: Optional[FleetCondition] = None
+
+    @property
+    def resolved(self) -> bool:
+        return self._resolved is not None
+
+    def resolve(self) -> FleetCondition:
+        if self._resolved is None:
+            cond = self._factory()
+            self._resolved = FleetCondition(self.name, cond.score_drop)
+        return self._resolved
+
+
+def resolve_condition(condition) -> FleetCondition:
+    """An eager :class:`FleetCondition` as-is; a deferred one derived
+    (cached on the deferred object)."""
+    if isinstance(condition, DeferredFleetCondition):
+        return condition.resolve()
+    return condition
+
+
 def degrade_scores(machine_scores: Dict[str, Dict[str, float]],
                    condition: FleetCondition
                    ) -> Dict[str, Dict[str, float]]:
     """Apply a condition's relative drops to a machine-score dict."""
+    condition = resolve_condition(condition)
     out = {m: dict(per) for m, per in machine_scores.items()}
     for vm, aspects in condition.score_drop.items():
         if vm not in out:
@@ -128,17 +164,27 @@ def simulate_degraded_fleet(machine_types: Sequence[str],
 def drifted_condition(machine_types: Sequence[str],
                       aspects: Sequence[str] = ("cpu",),
                       name: Optional[str] = None,
-                      seed: int = 0) -> FleetCondition:
+                      seed: int = 0, deferred: bool = False):
     """The canonical degraded-fleet condition used by the benchmark and
     the example: simulate the given machine types losing quality on the
     given aspects, run the fleet drift analytics, and turn the report
-    into a condition."""
-    report, node_types = simulate_degraded_fleet(
-        machine_types, degraded={vm: tuple(aspects)
-                                 for vm in machine_types}, seed=seed)
+    into a condition.
+
+    ``deferred=True`` returns a :class:`DeferredFleetCondition` that
+    runs the store-path simulation on first use instead of now — the
+    pipelined replay then overlaps that host work with device scans."""
     if name is None:
         name = f"{'/'.join(machine_types)}-{'/'.join(aspects)}-degraded"
-    return condition_from_drift(name, report, node_types)
+
+    def derive() -> FleetCondition:
+        report, node_types = simulate_degraded_fleet(
+            machine_types, degraded={vm: tuple(aspects)
+                                     for vm in machine_types}, seed=seed)
+        return condition_from_drift(name, report, node_types)
+
+    if deferred:
+        return DeferredFleetCondition(name, derive)
+    return derive()
 
 
 @dataclasses.dataclass(frozen=True)
@@ -146,7 +192,7 @@ class Scenario:
     workload: str
     seed: int
     variant: str  # one of VARIANTS
-    condition: FleetCondition
+    condition: FleetCondition  # or DeferredFleetCondition
     limit: float  # runtime constraint (seconds)
 
 
@@ -155,15 +201,27 @@ def build_scenarios(ds: ScoutDataset, *,
                     seeds: Sequence[int] = (0,),
                     variants: Sequence[str] = VARIANTS,
                     conditions: Sequence[FleetCondition] = (HEALTHY,),
-                    limit_percentile: float = 40.0) -> List[Scenario]:
+                    limit_percentile: float = 40.0,
+                    condition_major: bool = False) -> List[Scenario]:
     """Cartesian scenario matrix. Computing the per-workload runtime
     limits materializes the simulator cache in canonical order (see
-    module docstring)."""
+    module docstring).
+
+    ``condition_major=True`` orders the matrix condition-outermost, so
+    every contiguous lane block touches as few conditions as possible
+    — with deferred (store-path-derived) conditions, the pipelined
+    replay then derives each block's conditions while the previous
+    block runs on device. Building the matrix never resolves deferred
+    conditions."""
     workloads = list(ds.workloads) if workloads is None else workloads
     limits = {}
     for wl in workloads:
         rts, _, _ = ds.workload_arrays(wl)
         limits[wl] = float(np.percentile(rts, limit_percentile))
+    if condition_major:
+        return [Scenario(wl, seed, variant, cond, limits[wl])
+                for cond in conditions for wl in workloads
+                for seed in seeds for variant in variants]
     return [Scenario(wl, seed, variant, cond, limits[wl])
             for wl in workloads for seed in seeds
             for variant in variants for cond in conditions]
@@ -259,41 +317,161 @@ def lane_tables(ds: ScoutDataset, scenarios: Sequence[Scenario],
         init_idx=np.zeros((n_lanes, cfg.n_init), np.int32))
 
     base_dim = x_base.shape[1]
+    tab.x_train[:, :, :base_dim] = x_base
+    tab.x_cand[:, :, :base_dim] = x_base
+    # lanes sharing (workload, condition, variant, limit) get identical
+    # rows: assign per group (one fancy-index write each) instead of
+    # per lane — the python work is O(groups + lanes), which keeps
+    # table construction cheap enough to overlap with device scans
+    groups: Dict[Tuple, List[int]] = {}
     for lane, sc in enumerate(scenarios):
-        runtimes, costs, lows = workload_tables(sc.workload)
+        groups.setdefault(
+            (sc.workload, id(sc.condition), sc.variant, sc.limit),
+            []).append(lane)
+    for (wl, _, variant, limit), lanes in groups.items():
+        sc = scenarios[lanes[0]]
+        rows = np.asarray(lanes)
+        runtimes, costs, lows = workload_tables(wl)
         ns, fp_low = condition_tables(sc.condition)
-        tab.x_train[lane, :, :base_dim] = x_base
-        tab.x_cand[lane, :, :base_dim] = x_base
-        if sc.variant == "arrow":
+        if variant == "arrow":
             # evaluated runs carry their observed low-level metrics;
             # candidates keep the search-start zeros block
-            tab.x_train[lane, :, base_dim:] = lows
-        elif sc.variant == "arrow+perona":
+            tab.x_train[rows, :, base_dim:] = lows
+        elif variant == "arrow+perona":
             # fingerprint scores exist before any run: both sides
-            tab.x_train[lane, :, base_dim:] = fp_low
-            tab.x_cand[lane, :, base_dim:] = fp_low
-        tab.runtime[lane] = runtimes
-        tab.cost[lane] = costs
-        tab.y[lane] = np.where(runtimes <= sc.limit, costs, costs * 5.0)
-        tab.limit[lane] = sc.limit
-        tab.norm_scores[lane] = ns
-        tab.util_low[lane] = lows
-        tab.use_weighter[lane] = sc.variant.endswith("+perona")
-        tab.init_idx[lane] = np.random.default_rng(sc.seed).choice(
-            n_cand, cfg.n_init, replace=False)
+            tab.x_train[rows, :, base_dim:] = fp_low
+            tab.x_cand[rows, :, base_dim:] = fp_low
+        tab.runtime[rows] = runtimes
+        tab.cost[rows] = costs
+        tab.y[rows] = np.where(runtimes <= limit, costs, costs * 5.0)
+        tab.limit[rows] = limit
+        tab.norm_scores[rows] = ns
+        tab.util_low[rows] = lows
+        tab.use_weighter[rows] = variant.endswith("+perona")
+    init_cache: Dict[int, np.ndarray] = {}
+    for lane, sc in enumerate(scenarios):
+        if sc.seed not in init_cache:
+            init_cache[sc.seed] = np.random.default_rng(sc.seed).choice(
+                n_cand, cfg.n_init, replace=False).astype(np.int32)
+        tab.init_idx[lane] = init_cache[sc.seed]
     return tab
 
 
 def replay_scenarios(ds: ScoutDataset, scenarios: Sequence[Scenario],
                      machine_scores: Dict[str, Dict[str, float]],
                      cfg: Optional[ReplayConfig] = None,
-                     return_result: bool = False):
-    """End to end: lower the matrix, run the batched replay, return the
-    per-scenario :class:`SearchTrace` list (order matches input)."""
+                     return_result: bool = False, *,
+                     devices: Optional[Sequence] = None):
+    """End to end: lower the matrix, run the batched replay (sharded
+    over ``devices`` when given), return the per-scenario
+    :class:`SearchTrace` list (order matches input)."""
     cfg = ReplayConfig() if cfg is None else cfg
     tab = lane_tables(ds, scenarios, machine_scores, cfg)
-    result = replay(tab, cfg)
+    result = replay(tab, cfg, devices=devices)
     traces = traces_from_result(tab, result, ds.configs)
     if return_result:
         return traces, result
+    return traces
+
+
+def replay_pipelined(ds: ScoutDataset, scenarios: Sequence[Scenario],
+                     machine_scores: Dict[str, Dict[str, float]],
+                     cfg: Optional[ReplayConfig] = None, *,
+                     block_lanes: int = 128,
+                     devices: Optional[Sequence] = None,
+                     shard_blocks: bool = False,
+                     return_stats: bool = False):
+    """Host-pipelined replay of a large scenario matrix over per-device
+    lane buckets.
+
+    The matrix is chunked into fixed-size lane blocks; block N+1's
+    tables — workload arrays, deferred (store-path-derived) fleet
+    conditions, condition score matrices, seeded init draws — are
+    built on the host *while earlier blocks run on device*. Blocks are
+    round-robined over ``devices`` as independent single-program
+    dispatches (``replay_async(device=...)``), one worker thread per
+    device, up to ``len(devices)`` dispatches in flight: devices
+    execute different lane buckets concurrently while the main thread
+    keeps building tables and materializing finished blocks' traces (a
+    double-buffered loop generalized to mesh depth; XLA releases the
+    GIL during execution).
+
+    Every block pads its lane axis to the same ``block_lanes`` bucket
+    (lane padding repeats lane 0, masked out), so ONE traced program
+    serves any matrix size — replaying 100-, 200- and 432-lane matrices
+    reuses a single trace (``REPLAY_TRACES``; asserted in
+    tests/test_optimizer.py). Results are identical to the unpipelined
+    ``replay_scenarios`` lane-for-lane: blocks never interact, and a
+    lane's math does not depend on which device runs it.
+
+    ``shard_blocks=True`` instead partitions each block's lane axis
+    over ALL the devices with one ``shard_map`` dispatch in flight
+    (the whole-matrix sharded layout, blocked for table overlap):
+    prefer it when a single block saturates the mesh; the default
+    round-robin keeps devices busy on independent blocks.
+
+    Returns the per-scenario trace list; with ``return_stats`` also a
+    dict of pipeline counters (blocks, dispatches, device count, host
+    table seconds).
+    """
+    from concurrent.futures import ThreadPoolExecutor
+
+    from repro.common.mesh import pow2_devices
+
+    cfg = ReplayConfig() if cfg is None else cfg
+    if shard_blocks and devices is None:
+        raise ValueError("shard_blocks=True needs devices= (the mesh "
+                         "to partition each block over)")
+    block = next_pow2(max(block_lanes, 1))
+    devs = pow2_devices(devices) if devices is not None else [None]
+    devs = devs or [None]  # empty device list -> default placement
+    if shard_blocks:
+        devs = [None]  # one shard_map dispatch in flight at a time
+    traces: List = []
+    stats = {"blocks": 0, "dispatches": 0, "block_lanes": block,
+             "devices": (len(pow2_devices(devices))
+                         if devices is not None else 1),
+             "table_s": 0.0}
+
+    def run_block(tab, dev):
+        # worker thread: dispatch + device wait (GIL released inside
+        # XLA); per-device workers keep each device's blocks in order
+        if shard_blocks:
+            return replay_async(tab, cfg, devices=devices,
+                                lanes_floor=block).result()
+        return replay_async(tab, cfg, device=dev,
+                            lanes_floor=block).result()
+
+    def collect(tab, future):
+        result = future.result()
+        stats["dispatches"] += result.dispatches
+        traces.extend(traces_from_result(tab, result, ds.configs))
+
+    in_flight: List = []  # (tables, future), submission order
+    # one single-worker pool per device: a device's blocks dispatch in
+    # order from its own thread, and a long-running block on one
+    # device never steals the worker a later block needs for another
+    pools = [ThreadPoolExecutor(max_workers=1) for _ in devs]
+    try:
+        for i, start in enumerate(range(0, len(scenarios), block)):
+            chunk = scenarios[start:start + block]
+            t0 = time.perf_counter()  # host work, overlapped with the
+            tab = lane_tables(ds, chunk, machine_scores, cfg)
+            stats["table_s"] += time.perf_counter() - t0
+            d = i % len(devs)
+            in_flight.append(
+                (tab, pools[d].submit(run_block, tab, devs[d])))
+            stats["blocks"] += 1
+            # drain finished blocks (in order) without blocking, and
+            # cap the queue at one block per device
+            while in_flight and (in_flight[0][1].done()
+                                 or len(in_flight) > len(devs)):
+                collect(*in_flight.pop(0))
+        for pending in in_flight:
+            collect(*pending)
+    finally:
+        for pool in pools:
+            pool.shutdown(wait=True)
+    if return_stats:
+        return traces, stats
     return traces

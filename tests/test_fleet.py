@@ -350,6 +350,7 @@ def test_watchdog_through_fleet_service(setup):
 # ------------------------------------------------- sharded parity (slow)
 
 @pytest.mark.slow
+@pytest.mark.multidevice
 def test_sharded_scoring_bit_identical_subprocess():
     """8 virtual CPU devices: shard_map'd fleet scoring must produce
     bit-identical scores to a single-device scorer."""

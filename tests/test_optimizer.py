@@ -1,6 +1,12 @@
 """Batched BO replay engine: GP pinned against the scipy reference,
 per-seed trace parity with CherryPick/Arrow, Perona-weighting
-equivalence, degraded-fleet scenarios, compile amortization."""
+equivalence, degraded-fleet scenarios, compile amortization, sharded
+lane-axis bit parity and the host-pipelined block path."""
+
+import os
+import subprocess
+import sys
+import textwrap
 
 import numpy as np
 import pytest
@@ -10,7 +16,8 @@ from repro.optimizer import (HEALTHY, FleetCondition, ReplayConfig,
                              REPLAY_TRACES, build_scenarios,
                              condition_from_drift, degrade_scores,
                              lane_tables, reference_search, replay,
-                             replay_scenarios, simulate_degraded_fleet,
+                             replay_pipelined, replay_scenarios,
+                             simulate_degraded_fleet,
                              traces_from_result)
 from repro.tuning.scout import ScoutDataset, VM_TYPES, WORKLOAD_NAMES
 
@@ -214,6 +221,191 @@ def test_replay_compile_amortized(ds, machine_scores):
         r2 = replay(tab, cfg)
     np.testing.assert_array_equal(r1.chosen, r2.chosen)
     assert r1.dispatches == 1
+
+
+def _assert_same_traces(ref_traces, got_traces):
+    assert len(ref_traces) == len(got_traces)
+    for a, b in zip(ref_traces, got_traces):
+        assert [c.key for c in a.evaluated] == \
+            [c.key for c in b.evaluated]
+        assert a.best_valid_cost == b.best_valid_cost
+
+
+def test_pipelined_matches_unpipelined(ds, machine_scores):
+    """Blocked, double-buffered replay is lane-for-lane identical to
+    the one-dispatch path (blocks never interact) — in both dispatch
+    modes (round-robin per-device placement and sharded blocks)."""
+    scens = build_scenarios(ds, workloads=WORKLOAD_NAMES[:2],
+                            seeds=(0, 1), conditions=(HEALTHY,))
+    ref = replay_scenarios(ds, scens, machine_scores)
+    got, stats = replay_pipelined(ds, scens, machine_scores,
+                                  block_lanes=8, return_stats=True)
+    _assert_same_traces(ref, got)
+    assert stats["block_lanes"] == 8
+    assert stats["blocks"] == stats["dispatches"] == 2
+    assert stats["table_s"] > 0.0
+    import jax
+
+    sharded = replay_pipelined(ds, scens, machine_scores,
+                               block_lanes=8, devices=jax.devices(),
+                               shard_blocks=True)
+    _assert_same_traces(ref, sharded)
+
+
+def test_deferred_condition_resolves_lazily(ds, machine_scores):
+    """A DeferredFleetCondition derives its drops on first use inside
+    lane_tables (once, cached) and reproduces the eager condition's
+    lanes exactly; building the scenario matrix never resolves it."""
+    from repro.optimizer import DeferredFleetCondition, resolve_condition
+
+    calls = []
+    eager = FleetCondition("deg", {"c4.large": {"cpu": 0.4}})
+
+    def factory():
+        calls.append(1)
+        return eager
+
+    lazy = DeferredFleetCondition("deg", factory)
+    kwargs = dict(workloads=WORKLOAD_NAMES[:1], seeds=(0,),
+                  variants=("cherrypick+perona",))
+    lazy_scens = build_scenarios(ds, conditions=(lazy,),
+                                 condition_major=True, **kwargs)
+    assert calls == [] and not lazy.resolved
+    cfg = ReplayConfig()
+    tab_lazy = lane_tables(ds, lazy_scens, machine_scores, cfg)
+    assert calls == [1] and lazy.resolved
+    lane_tables(ds, lazy_scens, machine_scores, cfg)
+    assert calls == [1]  # cached
+    eager_scens = build_scenarios(ds, conditions=(eager,), **kwargs)
+    tab_eager = lane_tables(ds, eager_scens, machine_scores, cfg)
+    np.testing.assert_array_equal(tab_lazy.norm_scores,
+                                  tab_eager.norm_scores)
+    assert resolve_condition(lazy).score_drop == eager.score_drop
+    assert resolve_condition(eager) is eager
+
+
+def test_condition_major_order_same_traces(ds, machine_scores):
+    """condition_major reorders the matrix but every scenario's trace
+    is unchanged (scenario-keyed comparison across orders)."""
+    conds = (HEALTHY, FleetCondition("deg", {"r4.large": {"disk": 0.5}}))
+    kwargs = dict(workloads=WORKLOAD_NAMES[:2], seeds=(0, 1),
+                  conditions=conds)
+    a = build_scenarios(ds, **kwargs)
+    b = build_scenarios(ds, condition_major=True, **kwargs)
+    assert sorted(map(repr, a)) == sorted(map(repr, b)) and a != b
+    ta = {repr(s): t for s, t in
+          zip(a, replay_scenarios(ds, a, machine_scores))}
+    tb = {repr(s): t for s, t in
+          zip(b, replay_scenarios(ds, b, machine_scores))}
+    for k in ta:
+        assert [c.key for c in ta[k].evaluated] == \
+            [c.key for c in tb[k].evaluated]
+        assert ta[k].best_valid_cost == tb[k].best_valid_cost
+
+
+def test_pipelined_empty_and_partial_block(ds, machine_scores):
+    assert replay_pipelined(ds, [], machine_scores) == []
+    scens = build_scenarios(ds, workloads=WORKLOAD_NAMES[:1],
+                            seeds=(0,), variants=("cherrypick",),
+                            conditions=(HEALTHY,))
+    ref = replay_scenarios(ds, scens, machine_scores)
+    got = replay_pipelined(ds, scens, machine_scores, block_lanes=8)
+    _assert_same_traces(ref, got)
+
+
+@pytest.mark.slow
+def test_trace_amortized_across_lane_counts(ds, machine_scores,
+                                            degraded_condition):
+    """100-, 200- and 432-lane matrices: the unpipelined path compiles
+    one program per pow2 lane bucket (128/256/512) and reuses it, the
+    pipelined path reuses ONE fixed-block program across all three
+    matrix sizes."""
+    cfg = ReplayConfig()
+    scens = build_scenarios(ds, seeds=(0, 1, 2),
+                            conditions=(HEALTHY, degraded_condition))
+    assert len(scens) == 432
+    sizes = (100, 200, 432)
+    tabs = {n: lane_tables(ds, scens[:n], machine_scores, cfg)
+            for n in sizes}
+    results = {}
+    for n in sizes:  # warm each pow2 bucket (<= 1 tracing per bucket)
+        before = REPLAY_TRACES.count
+        results[n] = replay(tabs[n], cfg)
+        assert REPLAY_TRACES.count - before <= 1
+    with expect_traces(REPLAY_TRACES, 0):  # every bucket amortized
+        for n in sizes:
+            again = replay(tabs[n], cfg)
+            np.testing.assert_array_equal(again.chosen,
+                                          results[n].chosen)
+
+    # pipelined: fixed 64-lane blocks -> one program for ALL sizes
+    replay_pipelined(ds, scens[:100], machine_scores, cfg,
+                     block_lanes=64)  # warm the single block shape
+    with expect_traces(REPLAY_TRACES, 0):
+        for n in (200, 432):
+            got = replay_pipelined(ds, scens[:n], machine_scores, cfg,
+                                   block_lanes=64)
+            _assert_same_traces(
+                traces_from_result(tabs[n], results[n], ds.configs),
+                got)
+
+
+# ------------------------------------------- sharded lane axis (slow)
+
+@pytest.mark.slow
+@pytest.mark.multidevice
+def test_sharded_replay_bit_identical_subprocess():
+    """8 virtual CPU devices: shard_map'd lanes must reproduce the
+    single-device scanned replay bit-for-bit on the full 432-lane
+    matrix, and the pipelined sharded path must match lane-for-lane."""
+    code = textwrap.dedent("""
+        import os
+        os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+        import jax
+        import numpy as np
+        from repro.optimizer import (HEALTHY, FleetCondition,
+                                     ReplayConfig, build_scenarios,
+                                     lane_tables, replay,
+                                     replay_pipelined, replay_scenarios,
+                                     traces_from_result)
+        from repro.tuning.scout import ScoutDataset, VM_TYPES
+
+        assert jax.device_count() == 8
+        rng = np.random.default_rng(3)
+        scores = {vm: {a: float(rng.uniform(0.5, 2.0))
+                       for a in ("cpu", "memory", "disk", "network")}
+                  for vm in VM_TYPES}
+        ds = ScoutDataset(seed=0)
+        cfg = ReplayConfig()
+        cond = FleetCondition("deg", {"c4.large": {"cpu": 0.3},
+                                      "m4.xlarge": {"memory": 0.4}})
+        scens = build_scenarios(ds, seeds=(0, 1, 2),
+                                conditions=(HEALTHY, cond))
+        assert len(scens) == 432
+        tab = lane_tables(ds, scens, scores, cfg)
+        single = replay(tab, cfg)
+        sharded = replay(tab, cfg, devices=jax.devices())
+        assert np.array_equal(single.chosen, sharded.chosen)
+        assert np.array_equal(single.count, sharded.count)
+
+        ref = traces_from_result(tab, single, ds.configs)
+        piped = replay_pipelined(ds, scens, scores, cfg,
+                                 block_lanes=64,
+                                 devices=jax.devices())
+        for a, b in zip(ref, piped):
+            assert [c.key for c in a.evaluated] == \\
+                [c.key for c in b.evaluated]
+            assert a.best_valid_cost == b.best_valid_cost
+        print("OK bit-identical across", jax.device_count(), "devices")
+    """)
+    env = dict(os.environ)
+    env["PYTHONPATH"] = "src"
+    proc = subprocess.run(
+        [sys.executable, "-c", code],
+        cwd=os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+        env=env, capture_output=True, text=True, timeout=420)
+    assert proc.returncode == 0, proc.stderr[-2000:]
+    assert "OK bit-identical" in proc.stdout
 
 
 def test_traces_from_result_fields(ds, machine_scores):

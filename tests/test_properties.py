@@ -136,6 +136,20 @@ def test_next_pow2_idempotent_on_powers_of_two(k, floor):
     assert next_pow2(b, floor) == b
 
 
+@settings(max_examples=60, deadline=None)
+@given(st.integers(0, 1 << 20), st.sampled_from([1, 2, 4, 8]),
+       st.sampled_from([1, 16, 128]))
+def test_shard_size_divisible_pow2(n, n_devices, floor):
+    """shard_size: a power of two >= max(n, floor) that every (pow2)
+    device mesh divides evenly."""
+    from repro.common.mesh import shard_size
+
+    s = shard_size(n, n_devices, floor=floor)
+    assert s >= n and s >= floor and s >= n_devices
+    assert s & (s - 1) == 0
+    assert s % n_devices == 0
+
+
 @settings(max_examples=40, deadline=None)
 @given(st.integers(0, 10_000), st.floats(-5.0, 5.0))
 def test_expected_improvement_nonnegative(seed, best):
