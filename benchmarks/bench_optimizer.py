@@ -25,7 +25,17 @@ dataset, so every lane must reproduce its sequential trace exactly
   all host work, so the honest baseline is
   ``large.unpipelined.wall_s`` = the serial ``replay_scenarios`` path
   on one device. Both are measured rep-interleaved and reported as
-  medians (ambient load hits both paths equally).
+  medians (ambient load hits both paths equally);
+- ``seeded``     — the same scanned program fed the compact
+  ``SeededLaneSpec`` instead of host-materialized lane tables: every
+  stochastic table cell is re-derived *inside* the compiled program
+  from counter-based fold-in keys (``common.rng``), bit-identical
+  picks asserted against the host-table replay. ``huge.*`` scales the
+  fleet sweep to a 10^4-lane matrix where host table construction
+  dominates: ``huge.lane_tables_s`` vs ``huge.spec_s`` is the
+  O(L*C*D) -> O(W*C + L) host-work drop, and the seeded pipelined
+  end-to-end wall clock is compared against the host-table pipeline
+  on the identical matrix (rep-interleaved).
 
 Run under ``XLA_FLAGS=--xla_force_host_platform_device_count=N`` (or
 ``benchmarks/run.py --devices N``) to exercise the multi-device rows
@@ -84,6 +94,15 @@ def _best_of(fn, reps: int = 3):
     return best, out
 
 
+def _assert_parity(ref_traces, got_traces):
+    """Lane-for-lane trace equality (evaluated keys + best-cost curve)."""
+    assert len(ref_traces) == len(got_traces)
+    for a, b in zip(ref_traces, got_traces):
+        assert [c.key for c in a.evaluated] == \
+            [c.key for c in b.evaluated], "seeded lane diverged"
+        assert a.best_valid_cost == b.best_valid_cost
+
+
 def _interleaved_medians(fns, reps: int = 5):
     """Median wall clock per callable, measured round-robin so ambient
     load hits every path equally; returns (medians, last results)."""
@@ -125,10 +144,11 @@ def run(rows, n_workloads: int = 18, n_seeds: int = 3,
     import jax
 
     from repro.common.mesh import pow2_devices, shard_size
-    from repro.optimizer import (build_scenarios, lane_tables,
-                                 reference_search, replay,
+    from repro.optimizer import (build_scenarios, lane_spec,
+                                 lane_tables, reference_search, replay,
                                  replay_pipelined, replay_scenarios,
-                                 traces_from_result, REPLAY_TRACES,
+                                 replay_seeded, traces_from_result,
+                                 traces_from_spec, REPLAY_TRACES,
                                  ReplayConfig)
     from repro.tuning.scout import (ScoutDataset, VM_TYPES,
                                     WORKLOAD_NAMES)
@@ -157,6 +177,18 @@ def run(rows, n_workloads: int = 18, n_seeds: int = 3,
     batched = traces_from_result(tab, result, ds.configs)
     assert REPLAY_TRACES.count == traces0  # warm: no retracing
 
+    # --- seeded replay: tables generated inside the program ----------
+    t0 = time.perf_counter()
+    spec = lane_spec(ds, scens, scores, cfg)
+    t_spec = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    replay_seeded(spec, cfg)
+    t_seed_compile = time.perf_counter() - t0
+    t_seed, seed_result = _best_of(lambda: replay_seeded(spec, cfg))
+    assert np.array_equal(seed_result.chosen, result.chosen)
+    assert np.array_equal(seed_result.count, result.count)
+    seeded_traces = traces_from_spec(spec, seed_result, ds.configs)
+
     # --- sharded whole-matrix dispatch (lane axis over the mesh) -----
     replay(tab, cfg, devices=devices)  # compile
     t_shard, shard_result = _best_of(
@@ -183,12 +215,59 @@ def run(rows, n_workloads: int = 18, n_seeds: int = 3,
     replay_scenarios(ds, large(), scores, cfg)
     replay_pipelined(ds, large(), scores, cfg,
                      block_lanes=large_block, devices=devices)  # warm
-    (t_unpipe, t_pipe), (large_ref, large_piped) = _interleaved_medians(
+    replay_pipelined(ds, large(), scores, cfg, seeded=True,
+                     block_lanes=large_block, devices=devices)  # warm
+    ((t_unpipe, t_pipe, t_pipe_seed),
+     (large_ref, large_piped, large_seeded)) = _interleaved_medians(
         (lambda: replay_scenarios(ds, large(), scores, cfg),
          lambda: replay_pipelined(ds, large(), scores, cfg,
                                   block_lanes=large_block,
+                                  devices=devices),
+         lambda: replay_pipelined(ds, large(), scores, cfg,
+                                  seeded=True,
+                                  block_lanes=large_block,
                                   devices=devices)),
         reps=2 if quick else 5)
+
+    # --- huge fleet sweep: the matrix host tables can't keep up with -
+    # (spec build is O(W*C + L); lane-table build is O(L*C*D) and
+    # dominates the host side at this scale)
+    huge = {}
+    if not quick:
+        huge_scens = _large_matrix(ds, 35)  # 18 x 35 x 4 x 4 = 10080
+        t0 = time.perf_counter()
+        huge_tab = lane_tables(ds, huge_scens, scores, cfg)
+        t_huge_tab = time.perf_counter() - t0
+        t0 = time.perf_counter()
+        huge_spec = lane_spec(ds, huge_scens, scores, cfg)
+        t_huge_spec = time.perf_counter() - t0
+        del huge_tab, huge_spec
+        # parity spot-check on the first block before the timed runs
+        spot = huge_scens[:large_block]
+        _assert_parity(replay_scenarios(ds, spot, scores, cfg),
+                       replay_scenarios(ds, spot, scores, cfg,
+                                        seeded=True))
+        # warm both pipelines over the full sweep: the huge matrix's
+        # condition-boundary blocks hit (block, n_conds, device)
+        # signatures the large phase never compiled
+        replay_pipelined(ds, huge_scens, scores, cfg,
+                         block_lanes=large_block, devices=devices)
+        replay_pipelined(ds, huge_scens, scores, cfg, seeded=True,
+                         block_lanes=large_block, devices=devices)
+        ((t_huge_host, t_huge_seed),
+         (huge_host_traces, huge_seeded_traces)) = _interleaved_medians(
+            (lambda: replay_pipelined(ds, huge_scens, scores, cfg,
+                                      block_lanes=large_block,
+                                      devices=devices),
+             lambda: replay_pipelined(ds, huge_scens, scores, cfg,
+                                      seeded=True,
+                                      block_lanes=large_block,
+                                      devices=devices)),
+            reps=1)
+        _assert_parity(huge_host_traces, huge_seeded_traces)
+        huge = {"lanes": len(huge_scens), "lane_tables_s": t_huge_tab,
+                "spec_s": t_huge_spec, "host_wall_s": t_huge_host,
+                "seeded_wall_s": t_huge_seed}
 
     # --- sequential reference loop -----------------------------------
     t0 = time.perf_counter()
@@ -206,12 +285,19 @@ def run(rows, n_workloads: int = 18, n_seeds: int = 3,
                      if diverged(st, bt))
     assert mismatches == 0, \
         f"{mismatches}/{len(scens)} lanes diverged from sequential"
+    seed_mismatches = sum(1 for st, bt in zip(sequential, seeded_traces)
+                          if diverged(st, bt))
+    assert seed_mismatches == 0, \
+        f"{seed_mismatches}/{len(scens)} seeded lanes diverged"
     assert not any(diverged(st, pt)
                    for st, pt in zip(sequential, pipelined)), \
         "pipelined lanes diverged from sequential"
     assert not any(diverged(rt, pt)
                    for rt, pt in zip(large_ref, large_piped)), \
         "pipelined large-matrix lanes diverged from unpipelined"
+    assert not any(diverged(rt, pt)
+                   for rt, pt in zip(large_ref, large_seeded)), \
+        "seeded pipelined large-matrix lanes diverged"
 
     n = len(scens)
     sps_seq = n / max(t_seq, 1e-9)
@@ -225,6 +311,14 @@ def run(rows, n_workloads: int = 18, n_seeds: int = 3,
                  f"{sps_bat / max(sps_seq, 1e-9):.1f}x"))
     rows.append(("optimizer.batched.compile_s", "", f"{t_compile:.2f}"))
     rows.append(("optimizer.lane_tables_s", "", f"{t_tables:.2f}"))
+    rows.append(("optimizer.seeded.searches_per_s",
+                 f"{t_seed / n * 1e6:.0f}",
+                 f"{n / max(t_seed, 1e-9):.1f}"))
+    rows.append(("optimizer.seeded.compile_s", "",
+                 f"{t_seed_compile:.2f}"))
+    rows.append(("optimizer.seeded.spec_s", "", f"{t_spec:.3f}"))
+    rows.append(("optimizer.seeded.trace_parity", "",
+                 f"{n - seed_mismatches}/{n}"))
     rows.append(("optimizer.batched.dispatches", "", result.dispatches))
     rows.append(("optimizer.batched.traces", "", REPLAY_TRACES.count))
     rows.append(("optimizer.trace_parity", "",
@@ -249,9 +343,29 @@ def run(rows, n_workloads: int = 18, n_seeds: int = 3,
     rows.append(("optimizer.large.block_lanes", "", large_block))
     rows.append(("optimizer.large.pipelined.speedup", "",
                  f"{t_unpipe / max(t_pipe, 1e-9):.2f}x"))
+    rows.append(("optimizer.large.pipelined.seeded.wall_s", "",
+                 f"{t_pipe_seed:.3f}"))
+    rows.append(("optimizer.large.pipelined.seeded.speedup", "",
+                 f"{t_unpipe / max(t_pipe_seed, 1e-9):.2f}x"))
+    if huge:
+        rows.append(("optimizer.huge.lanes", "", huge["lanes"]))
+        rows.append(("optimizer.huge.lane_tables_s", "",
+                     f"{huge['lane_tables_s']:.2f}"))
+        rows.append(("optimizer.huge.spec_s", "",
+                     f"{huge['spec_s']:.3f}"))
+        rows.append(("optimizer.huge.table_build_speedup", "",
+                     f"{huge['lane_tables_s'] / max(huge['spec_s'], 1e-9):.0f}x"))
+        rows.append(("optimizer.huge.pipelined.wall_s", "",
+                     f"{huge['host_wall_s']:.2f}"))
+        rows.append(("optimizer.huge.pipelined.seeded.wall_s", "",
+                     f"{huge['seeded_wall_s']:.2f}"))
+        rows.append(("optimizer.huge.pipelined.seeded.searches_per_s",
+                     "",
+                     f"{huge['lanes'] / max(huge['seeded_wall_s'], 1e-9):.1f}"))
     return {"n_workloads": n_workloads, "n_seeds": n_seeds,
             "variants": 4, "conditions": 2, "lanes": n,
             "max_runs": cfg.max_runs, "device_count": n_dev,
             "cpu_cores": os.cpu_count(),
             "lanes_per_device": shard_size(n, n_dev) // n_dev,
-            "large_lanes": n_large, "large_block_lanes": large_block}
+            "large_lanes": n_large, "large_block_lanes": large_block,
+            **{f"huge_{k}": v for k, v in huge.items()}}

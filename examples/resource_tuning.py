@@ -3,7 +3,10 @@ Perona-weighted acquisition — replayed through the batched BO engine.
 
 The scenario matrix (workload x tuner variant x fleet condition) runs
 as parallel vmapped GP lanes — sharded over every available device and
-host-pipelined in fixed-size lane blocks (``repro.optimizer``); every
+host-pipelined in fixed-size lane blocks (``repro.optimizer``), with
+the lane tables *generated inside the compiled program* from
+counter-based per-lane seeds (``seeded=True``: the host ships the
+compact ``SeededLaneSpec`` instead of materialized tables); every
 lane reproduces the sequential CherryPick/Arrow trace exactly, so the
 printed results are the paper's comparison at a fraction of the wall
 clock (see BENCH_optimizer.json).
@@ -50,7 +53,7 @@ def main():
                             conditions=(HEALTHY, degraded))
     t0 = time.perf_counter()
     traces, stats = replay_pipelined(ds, scens, scores,
-                                     block_lanes=16,
+                                     block_lanes=16, seeded=True,
                                      devices=jax.devices(),
                                      return_stats=True)
     dt = time.perf_counter() - t0
@@ -58,7 +61,7 @@ def main():
           f"({len(workloads)} workloads x {len(VARIANTS)} variants x "
           f"2 fleet conditions) in {dt:.2f}s — "
           f"{stats['blocks']} pipelined blocks of "
-          f"{stats['block_lanes']} lanes over "
+          f"{stats['block_lanes']} seeded lanes over "
           f"{len(jax.devices())} device(s)\n")
 
     by_key = {(s.workload, s.variant, s.condition.name): t

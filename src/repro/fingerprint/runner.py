@@ -13,6 +13,16 @@ looping records x tools x metrics in Python. ``run`` keeps the
 record-list API as a thin conversion wrapper, and ``run_reference`` is
 the original per-record loop, retained as the benchmarking baseline
 (see ``benchmarks/bench_fingerprint.py``).
+
+``run_frame`` draws are *counter-based* (``common.rng``): every group
+pulls from an independent generator keyed by ``(seed, round,
+benchmark_type, machine_type)`` and nodes iterate in sorted order, so
+a group's values are a pure function of that key path and the group's
+membership — never of dict insertion order or of which other machine
+types are present. The per-call ``round`` counter keeps streaming
+semantics (repeated rounds draw fresh values). ``run_reference``
+deliberately keeps the single sequential stream (``self.rng``) — it
+is the order-*dependent* baseline the frame path is measured against.
 """
 
 from __future__ import annotations
@@ -21,12 +31,17 @@ from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
+from repro.common.rng import folded_generator
 from repro.fingerprint.frame import BenchmarkFrame
 from repro.fingerprint.machines import MACHINE_PROFILES
 from repro.fingerprint.records import BenchmarkExecution
 from repro.fingerprint.tools import EXTRA_CONSTANTS, TOOLS, node_metrics
 
 BENCHMARK_TYPES = tuple(TOOLS)
+
+# fold-in stream tag of the columnar frame draws (bumping it re-rolls
+# every run_frame realization without touching run_reference)
+_FRAME_STREAM = 1
 
 _ASPECT = {
     "sysbench-cpu": "cpu",
@@ -56,8 +71,10 @@ def _columns_of(btype: str) -> List[Tuple[str, str]]:
 
 class SuiteRunner:
     def __init__(self, seed: int = 0, duration_s: float = 86400.0):
-        self.rng = np.random.default_rng(seed)
+        self.seed = seed
+        self.rng = np.random.default_rng(seed)  # run_reference only
         self.duration_s = duration_s
+        self._round = 0  # per-call counter: frame rounds stay distinct
 
     # ------------------------------------------------------------ columnar
     def run_frame(self, machines: Dict[str, str], runs_per_type: int,
@@ -96,20 +113,35 @@ class SuiteRunner:
         t = np.empty(N, np.float64)
         stressed_all = np.empty(N, bool)
 
+        # per-call round counter: repeated frame rounds on one runner
+        # draw fresh (but order-independent) values
+        rnd = self._round
+        self._round += 1
+
         # cluster-wide serialized slots for the network benchmarks: one
         # sorted pool, randomly assigned, so only one network benchmark
-        # is in flight at any time
+        # is in flight at any time; its own fold-in stream, consumed in
+        # canonical group order
         n_net = sum(runs_per_type * n_nodes
                     for b in BENCHMARK_TYPES if _ASPECT[b] == "network")
-        net_slots = np.sort(self.rng.uniform(0, self.duration_s, n_net))
-        net_order = self.rng.permutation(n_net)
+        net_rng = folded_generator(self.seed, rnd, "net-slots",
+                                   _FRAME_STREAM)
+        net_slots = np.sort(net_rng.uniform(0, self.duration_s, n_net))
+        net_order = net_rng.permutation(n_net)
         net_used = 0
 
         # group rows by (benchmark type x machine type): profile constant
-        # within a group, so every metric is one batched draw
+        # within a group, so every metric is one batched draw. Groups
+        # iterate in canonical sorted order and each pulls from its own
+        # (seed, round, btype, mtype) fold-in generator, so a group's
+        # draws never depend on dict insertion order or on which other
+        # machine types are present.
         nodes_by_mtype: Dict[str, List[str]] = {}
         for node, mtype in machines.items():
             nodes_by_mtype.setdefault(mtype, []).append(node)
+        group_mtypes = sorted(nodes_by_mtype)
+        for mtype in group_mtypes:
+            nodes_by_mtype[mtype].sort()
 
         off = 0
         for btype in BENCHMARK_TYPES:
@@ -118,8 +150,11 @@ class SuiteRunner:
             cols = np.asarray([col_index[key] for key in
                                _columns_of(btype)], np.int64)
             n_tool_cols = len(cols) - len(EXTRA_CONSTANTS[btype])
-            for mtype, nodes in nodes_by_mtype.items():
+            for mtype in group_mtypes:
+                nodes = nodes_by_mtype[mtype]
                 profile = MACHINE_PROFILES[mtype]
+                grng = folded_generator(self.seed, rnd, btype, mtype,
+                                        _FRAME_STREAM)
                 R = len(nodes) * runs_per_type
                 sl = slice(off, off + R)
                 rows_node = np.repeat(
@@ -130,16 +165,16 @@ class SuiteRunner:
                     net_used += R
                     t[sl] = slots
                 else:
-                    t[sl] = self.rng.uniform(0, self.duration_s, R)
+                    t[sl] = grng.uniform(0, self.duration_s, R)
                 degraded_mask = np.isin(
                     rows_node,
                     [node_code[n] for n in degraded if n in node_code])
                 stressed = degraded_mask | (
-                    self.rng.random(R) < stress_fraction)
+                    grng.random(R) < stress_fraction)
                 severity = np.where(
-                    stressed, self.rng.uniform(0.15, 1.0, R), 0.0)
+                    stressed, grng.uniform(0.15, 1.0, R), 0.0)
 
-                md = TOOLS[btype](profile, self.rng, severity)
+                md = TOOLS[btype](profile, grng, severity)
                 block = np.empty((R, len(cols)), np.float64)
                 for j, (name, (vals, _unit)) in enumerate(md.items()):
                     block[:, j] = vals
@@ -149,7 +184,7 @@ class SuiteRunner:
                 metrics[sl, cols] = block
                 present[sl, cols] = True
 
-                nd = node_metrics(profile, self.rng, severity, aspect)
+                nd = node_metrics(profile, grng, severity, aspect)
                 for name, vals in nd.items():
                     nmetrics[sl, ncol_index[name]] = vals
 

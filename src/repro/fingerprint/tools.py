@@ -12,6 +12,11 @@ The simulators are *batched*: ``severity`` is a ``(R,)`` array and every
 metric comes back as a ``(R,)`` value array — one RNG draw per metric
 column instead of one per run, which is what makes fleet-scale columnar
 acquisition cheap. R=1 recovers single-run semantics.
+
+``rng`` may be a ``np.random.Generator``, an int seed, or a fold-in
+path tuple (``common.rng.as_generator``): passing e.g. ``(seed, round,
+"fio", "e2-medium")`` gives draws that are a pure function of that
+path, independent of any other group's draw order.
 """
 
 from __future__ import annotations
@@ -20,6 +25,7 @@ from typing import Dict, Tuple
 
 import numpy as np
 
+from repro.common.rng import as_generator
 from repro.fingerprint.machines import (MachineProfile, STRESS_FACTORS,
                                         stress_multiplier)
 
@@ -54,6 +60,7 @@ def _full(severity: np.ndarray, value: float) -> np.ndarray:
 
 
 def sysbench_cpu(profile, rng, severity) -> Dict[str, Metric]:
+    rng = as_generator(rng)
     e = _eff(profile, severity, "cpu")
     n = profile.noise
     c = lambda v: _full(severity, v)
@@ -86,6 +93,7 @@ def sysbench_cpu(profile, rng, severity) -> Dict[str, Metric]:
 
 
 def sysbench_memory(profile, rng, severity) -> Dict[str, Metric]:
+    rng = as_generator(rng)
     e = _eff(profile, severity, "memory")
     n = profile.noise
     c = lambda v: _full(severity, v)
@@ -116,6 +124,7 @@ def sysbench_memory(profile, rng, severity) -> Dict[str, Metric]:
 
 
 def fio(profile, rng, severity) -> Dict[str, Metric]:
+    rng = as_generator(rng)
     e = _eff(profile, severity, "disk")
     n = profile.noise
     c = lambda v: _full(severity, v)
@@ -159,6 +168,7 @@ def fio(profile, rng, severity) -> Dict[str, Metric]:
 
 
 def ioping(profile, rng, severity) -> Dict[str, Metric]:
+    rng = as_generator(rng)
     e = _eff(profile, severity, "disk")
     n = profile.noise
     c = lambda v: _full(severity, v)
@@ -179,6 +189,7 @@ def ioping(profile, rng, severity) -> Dict[str, Metric]:
 
 
 def qperf(profile, rng, severity) -> Dict[str, Metric]:
+    rng = as_generator(rng)
     e = _eff(profile, severity, "network")
     n = profile.noise
     c = lambda v: _full(severity, v)
@@ -199,6 +210,7 @@ def qperf(profile, rng, severity) -> Dict[str, Metric]:
 
 
 def iperf3(profile, rng, severity) -> Dict[str, Metric]:
+    rng = as_generator(rng)
     e = _eff(profile, severity, "network")
     n = profile.noise
     c = lambda v: _full(severity, v)
@@ -243,6 +255,7 @@ def node_metrics(profile, rng, severity, aspect) -> Dict[str, np.ndarray]:
     """Prometheus-style low-level metrics sampled during a run (the GNN
     edge attributes and Arrow's augmentation features). Batched like the
     tool simulators: (R,) severity in, (R,) gauge columns out."""
+    rng = as_generator(rng)
     base = {
         "node.cpu_util": 0.35, "node.mem_util": 0.42,
         "node.disk_io_util": 0.18, "node.net_util": 0.12,

@@ -16,18 +16,27 @@ configuration searches as parallel vmapped lanes on device:
   (workload x seed x tuner variant x fleet condition) over the scout
   simulator, including degraded-node fleets from ``fleet.drift``, plus
   ``replay_pipelined``: fixed-size lane blocks whose host-side table
-  construction overlaps the previous block's device scan.
+  construction overlaps the previous block's device scan. The seeded
+  path (``lane_spec`` / ``replay_seeded``) ships only the compact
+  deterministic grid + per-lane ids and re-derives every stochastic
+  table cell inside the compiled program from counter-based
+  ``fold_in`` keys — bit-identical to the host tables.
 """
 
 from repro.optimizer.replay import (REPLAY_TRACES, BatchReplayResult,
-                                    PendingReplay, ReplayConfig, replay,
-                                    replay_async, traces_from_result)
+                                    PendingReplay, ReplayConfig,
+                                    SeededLaneSpec, replay,
+                                    replay_async, replay_seeded,
+                                    replay_seeded_async,
+                                    traces_from_result,
+                                    traces_from_spec)
 from repro.optimizer.scenarios import (HEALTHY, DeferredFleetCondition,
                                        FleetCondition, Scenario,
                                        build_scenarios,
                                        condition_from_drift,
                                        degrade_scores, drifted_condition,
-                                       lane_tables, reference_search,
+                                       lane_spec, lane_tables,
+                                       reference_search,
                                        replay_pipelined,
                                        replay_scenarios,
                                        resolve_condition,
@@ -35,10 +44,12 @@ from repro.optimizer.scenarios import (HEALTHY, DeferredFleetCondition,
 
 __all__ = [
     "REPLAY_TRACES", "BatchReplayResult", "PendingReplay",
-    "ReplayConfig", "replay", "replay_async", "traces_from_result",
+    "ReplayConfig", "SeededLaneSpec", "replay", "replay_async",
+    "replay_seeded", "replay_seeded_async", "traces_from_result",
+    "traces_from_spec",
     "HEALTHY", "DeferredFleetCondition", "FleetCondition", "Scenario",
     "build_scenarios", "condition_from_drift", "degrade_scores",
-    "drifted_condition", "lane_tables", "reference_search",
-    "replay_pipelined", "replay_scenarios", "resolve_condition",
-    "simulate_degraded_fleet",
+    "drifted_condition", "lane_spec", "lane_tables",
+    "reference_search", "replay_pipelined", "replay_scenarios",
+    "resolve_condition", "simulate_degraded_fleet",
 ]

@@ -96,6 +96,49 @@ class BatchReplayResult:
     dispatches: int  # device dispatches of this replay (always 1)
 
 
+@dataclasses.dataclass
+class SeededLaneSpec:
+    """Seeded replay program inputs: O(W*C + K*C + L) instead of the
+    O(L*C*D) materialized :class:`LaneTables`.
+
+    The shared grid tables (deterministic, workload/config/condition
+    indexed) are replicated across devices; the per-lane arrays are
+    just ids + the runtime limit + seeded init draws. The compiled
+    program re-derives every stochastic table cell in-program from
+    ``noise_key`` (counter-based ``fold_in(key, workload_id,
+    config_uid)`` draws, see ``common.rng``), bit-identical to the
+    host grid — lane tables are never materialized on host.
+
+    ``runtime``/``cost`` are the host copies of the (W, C) grids used
+    only to materialize traces after the fetch; they are not shipped
+    to the device."""
+
+    # shared grid tables (replicated)
+    base_runtime: np.ndarray  # (W, C) noise-free runtime component
+    low_num: np.ndarray  # (W, C, 4) utilization-metric numerators
+    low_caps: np.ndarray  # (4,) utilization metric caps
+    x_base: np.ndarray  # (C, B) base feature block
+    price: np.ndarray  # (C,) USD/h per candidate
+    count: np.ndarray  # (C,) node counts
+    config_uid: np.ndarray  # (C,) fold-in uids (noise counters)
+    norm_scores: np.ndarray  # (K, C, 4) per-condition weighter scores
+    fp_low: np.ndarray  # (K, C, 4) per-condition fingerprint features
+    noise_key: np.ndarray  # (2,) uint32 contention stream key
+    noise_scale: float  # lognormal noise scale
+    # per-lane (partitioned over devices)
+    workload_id: np.ndarray  # (L,) int32
+    condition_id: np.ndarray  # (L,) int32 row into norm_scores/fp_low
+    variant_id: np.ndarray  # (L,) int32 index into scenarios.VARIANTS
+    limit: np.ndarray  # (L,) runtime constraint
+    init_idx: np.ndarray  # (L, n_init) seeded init draws
+    # host-only trace tables
+    runtime: np.ndarray  # (W, C)
+    cost: np.ndarray  # (W, C)
+
+    def __len__(self) -> int:
+        return len(self.workload_id)
+
+
 def _lane_step(sel, count, active, xt, xc, y_tab, r_tab, ulow, ns,
                price, limit, use_w, *, cfg: ReplayConfig, slots: int):
     """One BO round of one lane (vmapped over lanes by the caller)."""
@@ -150,6 +193,12 @@ def _lane_step(sel, count, active, xt, xc, y_tab, r_tab, ulow, ns,
 #: Number of stacked lane-table arrays a replay dispatch consumes.
 N_TABLES = 9
 
+#: Replicated grid tables of a seeded dispatch (incl. the noise key).
+N_GRID_TABLES = 10
+
+#: Per-lane arrays of a seeded dispatch (ids + limit).
+N_LANE_ARGS = 4
+
 # first call per program signature traces + compiles; concurrent cold
 # calls from the pipelined per-device workers would each do so (jax
 # does not dedupe concurrent first-call tracing) — serialize only the
@@ -192,6 +241,88 @@ def _replay_fn(cfg: ReplayConfig, lanes: int, slots: int, n_cand: int,
         run = shard_map_1d(run, mesh,
                            in_specs=((lane,) * 3, (lane,) * N_TABLES),
                            out_specs=(lane, lane))
+    return jax.jit(run, donate_argnums=(0,))
+
+
+@functools.lru_cache(maxsize=32)
+def _seeded_replay_fn(cfg: ReplayConfig, lanes: int, slots: int,
+                      n_cand: int, base_dim: int, rounds: int,
+                      n_workloads: int, n_conds: int,
+                      noise_scale: float,
+                      devices: Optional[Tuple] = None):
+    """Jitted scan program that *generates* its lane tables in-program.
+
+    Same scanned search as :func:`_replay_fn`, but the per-lane tables
+    are expanded on device from the replicated grid + the lane's
+    ``(workload_id, condition_id, variant_id, limit)`` ids: the
+    contention noise is re-drawn from counter-based
+    ``fold_in(noise_key, workload_id, config_uid)`` keys
+    (``common.rng.lognormal_noise_row``), bit-identical to the host
+    grid, and every derived table (objective, penalized cost,
+    utilization metrics, feature blocks) follows the exact op order of
+    ``tuning.scout._build_grid`` / ``scenarios.lane_tables`` so the
+    f32-rounded argmax selections match the host-table program
+    bit-for-bit. Nothing of size O(lanes x candidates) ever exists on
+    host."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro.common.rng import lognormal_noise_row
+
+    step = functools.partial(_lane_step, cfg=cfg, slots=slots)
+    step_v = jax.vmap(step)
+
+    def expand(noise_key, grid, wid, cid, vid, limit):
+        (base, low_num, low_caps, x_base, price, count, uid,
+         ns, fp) = grid
+        # same op order as the host grid: one multiply for runtime,
+        # left-to-right cost chain, capped utilization ratios
+        noise = lognormal_noise_row(noise_key, wid, uid, noise_scale)
+        rt = base[wid] * noise
+        cost = rt / 3600.0 * price * count
+        y = jnp.where(rt <= limit, cost, cost * 5.0)
+        rtm = jnp.maximum(rt, 1e-6)
+        denom = jnp.stack([rtm, jnp.ones_like(rtm), rtm, rtm], axis=-1)
+        lows = jnp.minimum(low_caps, low_num[wid] / denom)
+        zeros = jnp.zeros_like(lows)
+        # variant feature blocks (scenarios.VARIANTS order): arrow
+        # trains on observed lows (candidates imputed to zero),
+        # arrow+perona uses the fingerprint lows on both sides
+        low_train = jnp.where(vid == 2, lows,
+                              jnp.where(vid == 3, fp[cid], zeros))
+        low_cand = jnp.where(vid == 3, fp[cid], zeros)
+        xt = jnp.concatenate([x_base, low_train], axis=1)
+        xc = jnp.concatenate([x_base, low_cand], axis=1)
+        return (xt, xc, y, rt, lows, ns[cid],
+                jnp.broadcast_to(price, rt.shape), limit,
+                (vid % 2) == 1)
+
+    def run(carry, lane_args, grid_args):
+        REPLAY_TRACES.tick()
+        noise_key = grid_args[-1]
+        grid = grid_args[:-1]
+        wid, cid, vid, limit = lane_args
+        tables = jax.vmap(
+            lambda w, k, v, l: expand(noise_key, grid, w, k, v, l)
+        )(wid, cid, vid, limit)
+
+        def scan_step(c, _):
+            sel, count, active = c
+            sel, count, active = step_v(sel, count, active, *tables)
+            return (sel, count, active), None
+
+        (sel, count, _), _ = jax.lax.scan(scan_step, carry, None,
+                                          length=rounds)
+        return sel, count
+
+    if devices is not None and len(devices) > 1:
+        mesh = build_mesh("lanes", devices)
+        lane = axis_specs("lanes", 1)[0]
+        run = shard_map_1d(
+            run, mesh,
+            in_specs=((lane,) * 3, (lane,) * N_LANE_ARGS,
+                      axis_specs("lanes", 0, N_GRID_TABLES)),
+            out_specs=(lane, lane))
     return jax.jit(run, donate_argnums=(0,))
 
 
@@ -307,6 +438,109 @@ def replay(tables: LaneTables,
                         lanes_floor=lanes_floor).result()
 
 
+def replay_seeded_async(spec: SeededLaneSpec,
+                        cfg: Optional[ReplayConfig] = None, *,
+                        devices: Optional[Sequence] = None,
+                        device=None,
+                        lanes_floor: int = 1) -> PendingReplay:
+    """Dispatch a seeded replay: lane tables are generated *inside*
+    the compiled program from ``spec``'s grid + per-lane ids, so the
+    host ships O(W*C + K*C + L) arrays instead of the O(L*C*D)
+    :class:`LaneTables`. Options mirror :func:`replay_async`.
+
+    The condition axis is pow2-padded so matrices with different
+    condition counts reuse one compiled program."""
+    import jax
+    from jax.experimental import enable_x64
+
+    cfg = ReplayConfig() if cfg is None else cfg
+    if devices is not None and device is not None:
+        raise ValueError("pass either devices= (shard_map) or "
+                         "device= (placement), not both")
+    n_lanes = len(spec)
+    if n_lanes == 0:
+        return PendingReplay(
+            n_lanes=0, dispatches=0,
+            _sel=np.zeros((0, cfg.max_runs), np.int32),
+            _count=np.zeros(0, np.int32))
+    devs = tuple(pow2_devices(devices)) if devices is not None else None
+    if devs is not None and len(devs) <= 1:
+        devs = None  # same un-sharded program: share its cache entry
+    n_dev = len(devs) if devs else 1
+    lanes = shard_size(n_lanes, n_dev, floor=lanes_floor)
+    slots = shard_size(cfg.max_runs)
+    n_cand, base_dim = spec.x_base.shape
+    rounds = cfg.max_runs - cfg.n_init
+    n_workloads = spec.base_runtime.shape[0]
+    # pad the condition axis to pow2: fleet sweeps with differing
+    # condition counts then share one compiled program
+    n_conds = shard_size(len(spec.norm_scores))
+    ns, fp = spec.norm_scores, spec.fp_low
+    if n_conds > len(ns):
+        extra = n_conds - len(ns)
+        ns = np.concatenate([ns, np.zeros((extra,) + ns.shape[1:])], 0)
+        fp = np.concatenate([fp, np.zeros((extra,) + fp.shape[1:])], 0)
+
+    def pad(a):  # pad the lane axis by repeating lane 0 (masked out)
+        return pad_lanes(a, lanes)
+
+    sel0 = np.full((lanes, cfg.max_runs), -1, np.int32)
+    sel0[:, : cfg.n_init] = pad(spec.init_idx)
+    count0 = np.full(lanes, cfg.n_init, np.int32)
+    active0 = np.ones(lanes, bool)
+
+    from repro.serving.engine import silence_unusable_donation
+
+    fn = _seeded_replay_fn(cfg, lanes, slots, n_cand, base_dim, rounds,
+                           n_workloads, n_conds,
+                           float(spec.noise_scale), devs)
+
+    def to_dev(a):
+        if device is not None:
+            return jax.device_put(a, device)
+        return jax.numpy.asarray(a)
+
+    with enable_x64(), silence_unusable_donation():
+        lane_args = tuple(
+            to_dev(pad(a)) for a in (
+                spec.workload_id.astype(np.int32, copy=False),
+                spec.condition_id.astype(np.int32, copy=False),
+                spec.variant_id.astype(np.int32, copy=False),
+                spec.limit.astype(np.float64, copy=False)))
+        grid_args = tuple(
+            to_dev(a) for a in (
+                spec.base_runtime.astype(np.float64, copy=False),
+                spec.low_num.astype(np.float64, copy=False),
+                spec.low_caps.astype(np.float64, copy=False),
+                spec.x_base.astype(np.float64, copy=False),
+                spec.price.astype(np.float64, copy=False),
+                spec.count.astype(np.float64, copy=False),
+                spec.config_uid.astype(np.int32, copy=False),
+                ns.astype(np.float64, copy=False),
+                fp.astype(np.float64, copy=False),
+                spec.noise_key))
+        carry0 = (to_dev(sel0), to_dev(count0), to_dev(active0))
+        sig = ("seeded", cfg, lanes, slots, n_cand, base_dim, rounds,
+               n_workloads, n_conds, devs, device)
+        if sig in _COMPILED_SIGNATURES:
+            sel, count = fn(carry0, lane_args, grid_args)
+        else:
+            with _COMPILE_LOCK:
+                sel, count = fn(carry0, lane_args, grid_args)
+                _COMPILED_SIGNATURES.add(sig)
+    return PendingReplay(n_lanes=n_lanes, dispatches=1,
+                         _sel=sel, _count=count)
+
+
+def replay_seeded(spec: SeededLaneSpec,
+                  cfg: Optional[ReplayConfig] = None, *,
+                  devices: Optional[Sequence] = None,
+                  lanes_floor: int = 1) -> BatchReplayResult:
+    """Run a seeded replay (tables generated in-program) and fetch."""
+    return replay_seeded_async(spec, cfg, devices=devices,
+                               lanes_floor=lanes_floor).result()
+
+
 def traces_from_result(tables: LaneTables, result: BatchReplayResult,
                        configs) -> List["SearchTrace"]:
     """Materialize per-lane :class:`tuning.cherrypick.SearchTrace`
@@ -317,8 +551,6 @@ def traces_from_result(tables: LaneTables, result: BatchReplayResult,
     per-lane python work is just the object construction, which keeps
     trace materialization cheap enough to overlap with device scans in
     the pipelined path."""
-    from repro.tuning.cherrypick import SearchTrace
-
     n = len(tables)
     if n == 0:
         return []
@@ -326,15 +558,40 @@ def traces_from_result(tables: LaneTables, result: BatchReplayResult,
     idx = np.maximum(picks_all, 0)
     costs_all = np.take_along_axis(tables.cost, idx, axis=1)
     runtimes_all = np.take_along_axis(tables.runtime, idx, axis=1)
-    valid = runtimes_all <= tables.limit[:, None]
+    return _materialize_traces(picks_all, result.count[:n], costs_all,
+                               runtimes_all, tables.limit[:n], configs)
+
+
+def traces_from_spec(spec: SeededLaneSpec, result: BatchReplayResult,
+                     configs) -> List["SearchTrace"]:
+    """Materialize seeded-replay traces: per-lane costs/runtimes are
+    gathered from the spec's host-side (W, C) grid tables via the
+    lane's workload row — no per-lane tables needed."""
+    n = len(spec)
+    if n == 0:
+        return []
+    picks_all = result.chosen[:n]
+    idx = np.maximum(picks_all, 0)
+    wid = spec.workload_id[:n, None]
+    costs_all = spec.cost[wid, idx]
+    runtimes_all = spec.runtime[wid, idx]
+    return _materialize_traces(picks_all, result.count[:n], costs_all,
+                               runtimes_all, spec.limit[:n], configs)
+
+
+def _materialize_traces(picks_all, counts, costs_all, runtimes_all,
+                        limits, configs) -> List["SearchTrace"]:
+    from repro.tuning.cherrypick import SearchTrace
+
+    valid = runtimes_all <= limits[:, None]
     # running min over valid runs only; lanes with no valid run yet
     # stay at +inf (the sequential bookkeeping)
     best_all = np.minimum.accumulate(
         np.where(valid, costs_all, np.inf), axis=1)
 
     out = []
-    for lane in range(n):
-        k = int(result.count[lane])
+    for lane in range(len(counts)):
+        k = int(counts[lane])
         out.append(SearchTrace(
             evaluated=[configs[int(i)] for i in picks_all[lane, :k]],
             costs=costs_all[lane, :k].tolist(),

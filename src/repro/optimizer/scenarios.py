@@ -21,6 +21,7 @@ every later consumer.
 from __future__ import annotations
 
 import dataclasses
+import threading
 import time
 from typing import Dict, List, Mapping, Optional, Sequence, Tuple
 
@@ -29,9 +30,12 @@ import numpy as np
 from repro.common.bucketing import next_pow2
 from repro.core.ranking import machine_score_matrix, \
     machine_score_vector
-from repro.optimizer.replay import (LaneTables, ReplayConfig, replay,
-                                    replay_async, traces_from_result)
-from repro.tuning.scout import PRICES, ScoutDataset
+from repro.optimizer.replay import (LaneTables, ReplayConfig,
+                                    SeededLaneSpec, replay,
+                                    replay_async, replay_seeded_async,
+                                    traces_from_result,
+                                    traces_from_spec)
+from repro.tuning.scout import LOW_CAPS, PRICES, ScoutDataset
 
 VARIANTS = ("cherrypick", "cherrypick+perona", "arrow", "arrow+perona")
 
@@ -62,15 +66,24 @@ class DeferredFleetCondition:
         self.name = name
         self._factory = factory
         self._resolved: Optional[FleetCondition] = None
+        self._lock = threading.Lock()
 
     @property
     def resolved(self) -> bool:
         return self._resolved is not None
 
     def resolve(self) -> FleetCondition:
+        # double-checked: concurrent resolvers (pipelined per-device
+        # workers touching a shared condition) must not run the
+        # factory twice — beyond the wasted store-path simulation, two
+        # FleetCondition objects would split the replay engine's
+        # id()-keyed condition caches
         if self._resolved is None:
-            cond = self._factory()
-            self._resolved = FleetCondition(self.name, cond.score_drop)
+            with self._lock:
+                if self._resolved is None:
+                    cond = self._factory()
+                    self._resolved = FleetCondition(self.name,
+                                                    cond.score_drop)
         return self._resolved
 
 
@@ -357,18 +370,93 @@ def lane_tables(ds: ScoutDataset, scenarios: Sequence[Scenario],
     return tab
 
 
+def lane_spec(ds: ScoutDataset, scenarios: Sequence[Scenario],
+              machine_scores: Dict[str, Dict[str, float]],
+              cfg: Optional[ReplayConfig] = None) -> SeededLaneSpec:
+    """Lower scenarios to the *seeded* replay inputs: the shared
+    deterministic grid (``ds.grid``), one score matrix per distinct
+    fleet condition, and per-lane ids. O(W*C + K*C + L) host work and
+    memory — the O(L*C*D) lane tables are generated inside the
+    compiled program instead (``replay.replay_seeded_async``), with
+    the contention noise re-drawn on device from ``ds.grid.noise_key``
+    counter-based keys."""
+    from repro.tuning.perona_weights import normalized_machine_scores
+
+    cfg = ReplayConfig() if cfg is None else cfg
+    configs = ds.configs
+    n_cand = len(configs)
+    grid = ds.grid
+    n_lanes = len(scenarios)
+
+    # one score-matrix pair per distinct condition object (identity
+    # keyed: distinct conditions may share a name); resolving a
+    # deferred condition happens here, on the host, thread-safely
+    cond_rows: Dict[int, int] = {}
+    ns_rows: List[np.ndarray] = []
+    fp_rows: List[np.ndarray] = []
+    condition_id = np.empty(n_lanes, np.int32)
+    workload_id = np.empty(n_lanes, np.int32)
+    variant_id = np.empty(n_lanes, np.int32)
+    limit = np.empty(n_lanes, np.float64)
+    init_idx = np.zeros((n_lanes, cfg.n_init), np.int32)
+    init_cache: Dict[int, np.ndarray] = {}
+    for lane, sc in enumerate(scenarios):
+        row = cond_rows.get(id(sc.condition))
+        if row is None:
+            scores = degrade_scores(machine_scores, sc.condition)
+            norm = normalized_machine_scores(scores)
+            ns_rows.append(np.stack([norm.get(c.vm_type, np.ones(4))
+                                     for c in configs]))
+            fp_rows.append(machine_score_matrix(
+                scores, [c.vm_type for c in configs]))
+            row = cond_rows[id(sc.condition)] = len(ns_rows) - 1
+        condition_id[lane] = row
+        workload_id[lane] = ds.workload_id(sc.workload)
+        variant_id[lane] = VARIANTS.index(sc.variant)
+        limit[lane] = sc.limit
+        if sc.seed not in init_cache:
+            init_cache[sc.seed] = np.random.default_rng(sc.seed).choice(
+                n_cand, cfg.n_init, replace=False).astype(np.int32)
+        init_idx[lane] = init_cache[sc.seed]
+
+    from repro.tuning.scout import CONTENTION_SCALE
+
+    return SeededLaneSpec(
+        base_runtime=grid.base_runtime, low_num=grid.low_num,
+        low_caps=np.asarray(LOW_CAPS, np.float64),
+        x_base=grid.x_base, price=grid.price,
+        count=grid.count.astype(np.float64, copy=False),
+        config_uid=grid.config_uid,
+        norm_scores=np.stack(ns_rows), fp_low=np.stack(fp_rows),
+        noise_key=grid.noise_key, noise_scale=CONTENTION_SCALE,
+        workload_id=workload_id, condition_id=condition_id,
+        variant_id=variant_id, limit=limit, init_idx=init_idx,
+        runtime=grid.runtime, cost=grid.cost)
+
+
 def replay_scenarios(ds: ScoutDataset, scenarios: Sequence[Scenario],
                      machine_scores: Dict[str, Dict[str, float]],
                      cfg: Optional[ReplayConfig] = None,
                      return_result: bool = False, *,
-                     devices: Optional[Sequence] = None):
+                     devices: Optional[Sequence] = None,
+                     seeded: bool = False):
     """End to end: lower the matrix, run the batched replay (sharded
     over ``devices`` when given), return the per-scenario
-    :class:`SearchTrace` list (order matches input)."""
+    :class:`SearchTrace` list (order matches input).
+
+    ``seeded=True`` lowers to the compact :class:`SeededLaneSpec` and
+    generates the lane tables inside the compiled program instead of
+    materializing them on host — bit-identical traces."""
     cfg = ReplayConfig() if cfg is None else cfg
-    tab = lane_tables(ds, scenarios, machine_scores, cfg)
-    result = replay(tab, cfg, devices=devices)
-    traces = traces_from_result(tab, result, ds.configs)
+    if seeded:
+        spec = lane_spec(ds, scenarios, machine_scores, cfg)
+        result = replay_seeded_async(spec, cfg,
+                                     devices=devices).result()
+        traces = traces_from_spec(spec, result, ds.configs)
+    else:
+        tab = lane_tables(ds, scenarios, machine_scores, cfg)
+        result = replay(tab, cfg, devices=devices)
+        traces = traces_from_result(tab, result, ds.configs)
     if return_result:
         return traces, result
     return traces
@@ -380,6 +468,7 @@ def replay_pipelined(ds: ScoutDataset, scenarios: Sequence[Scenario],
                      block_lanes: int = 128,
                      devices: Optional[Sequence] = None,
                      shard_blocks: bool = False,
+                     seeded: bool = False,
                      return_stats: bool = False):
     """Host-pipelined replay of a large scenario matrix over per-device
     lane buckets.
@@ -410,6 +499,13 @@ def replay_pipelined(ds: ScoutDataset, scenarios: Sequence[Scenario],
     prefer it when a single block saturates the mesh; the default
     round-robin keeps devices busy on independent blocks.
 
+    ``seeded=True`` lowers each block to the compact
+    :class:`SeededLaneSpec` (O(block) host work per block instead of
+    O(block x candidates x dims)) and generates the lane tables inside
+    the compiled program — same traces, far less host table time, so
+    the pipeline stays device-bound at matrix sizes where host table
+    construction would otherwise dominate.
+
     Returns the per-scenario trace list; with ``return_stats`` also a
     dict of pipeline counters (blocks, dispatches, device count, host
     table seconds).
@@ -433,19 +529,24 @@ def replay_pipelined(ds: ScoutDataset, scenarios: Sequence[Scenario],
                          if devices is not None else 1),
              "table_s": 0.0}
 
+    dispatch = replay_seeded_async if seeded else replay_async
+
     def run_block(tab, dev):
         # worker thread: dispatch + device wait (GIL released inside
         # XLA); per-device workers keep each device's blocks in order
         if shard_blocks:
-            return replay_async(tab, cfg, devices=devices,
-                                lanes_floor=block).result()
-        return replay_async(tab, cfg, device=dev,
+            return dispatch(tab, cfg, devices=devices,
                             lanes_floor=block).result()
+        return dispatch(tab, cfg, device=dev,
+                        lanes_floor=block).result()
 
     def collect(tab, future):
         result = future.result()
         stats["dispatches"] += result.dispatches
-        traces.extend(traces_from_result(tab, result, ds.configs))
+        if seeded:
+            traces.extend(traces_from_spec(tab, result, ds.configs))
+        else:
+            traces.extend(traces_from_result(tab, result, ds.configs))
 
     in_flight: List = []  # (tables, future), submission order
     # one single-worker pool per device: a device's blocks dispatch in
@@ -456,7 +557,10 @@ def replay_pipelined(ds: ScoutDataset, scenarios: Sequence[Scenario],
         for i, start in enumerate(range(0, len(scenarios), block)):
             chunk = scenarios[start:start + block]
             t0 = time.perf_counter()  # host work, overlapped with the
-            tab = lane_tables(ds, chunk, machine_scores, cfg)
+            if seeded:
+                tab = lane_spec(ds, chunk, machine_scores, cfg)
+            else:
+                tab = lane_tables(ds, chunk, machine_scores, cfg)
             stats["table_s"] += time.perf_counter() - t0
             d = i % len(devs)
             in_flight.append(

@@ -15,10 +15,11 @@ from _trace_utils import expect_traces
 from repro.optimizer import (HEALTHY, FleetCondition, ReplayConfig,
                              REPLAY_TRACES, build_scenarios,
                              condition_from_drift, degrade_scores,
-                             lane_tables, reference_search, replay,
-                             replay_pipelined, replay_scenarios,
+                             lane_spec, lane_tables, reference_search,
+                             replay, replay_pipelined,
+                             replay_scenarios, replay_seeded,
                              simulate_degraded_fleet,
-                             traces_from_result)
+                             traces_from_result, traces_from_spec)
 from repro.tuning.scout import ScoutDataset, VM_TYPES, WORKLOAD_NAMES
 
 
@@ -350,6 +351,73 @@ def test_trace_amortized_across_lane_counts(ds, machine_scores,
                 got)
 
 
+# ----------------------------------------------------- seeded replay
+
+def test_seeded_replay_bit_identical_to_host_tables(
+        ds, machine_scores, degraded_condition):
+    """The in-program table generation (seeded spec, counter-based
+    noise re-drawn on device) reproduces the host-materialized lane
+    tables' replay bit-for-bit: same selections, same counts, same
+    traces — across variants and a degraded condition."""
+    cfg = ReplayConfig()
+    scens = build_scenarios(
+        ds, workloads=WORKLOAD_NAMES[:3], seeds=(0, 1),
+        conditions=(HEALTHY, degraded_condition))
+    tab = lane_tables(ds, scens, machine_scores, cfg)
+    host = replay(tab, cfg)
+    spec = lane_spec(ds, scens, machine_scores, cfg)
+    seeded = replay_seeded(spec, cfg)
+    np.testing.assert_array_equal(host.chosen, seeded.chosen)
+    np.testing.assert_array_equal(host.count, seeded.count)
+    for a, b in zip(traces_from_result(tab, host, ds.configs),
+                    traces_from_spec(spec, seeded, ds.configs)):
+        assert [c.key for c in a.evaluated] == \
+            [c.key for c in b.evaluated]
+        assert a.costs == b.costs and a.runtimes == b.runtimes
+        assert a.best_valid_cost == b.best_valid_cost
+        assert a.search_cost == b.search_cost
+
+
+def test_seeded_scenarios_end_to_end(ds, machine_scores):
+    """replay_scenarios(seeded=True) matches the host-table path and
+    the sequential reference lane-for-lane."""
+    scens = build_scenarios(ds, workloads=WORKLOAD_NAMES[:2],
+                            seeds=(0,), conditions=(HEALTHY,))
+    ref = replay_scenarios(ds, scens, machine_scores)
+    got = replay_scenarios(ds, scens, machine_scores, seeded=True)
+    _assert_same_traces(ref, got)
+    for sc, bt in zip(scens, got):
+        _assert_trace_equal(reference_search(ds, sc, machine_scores),
+                            bt, sc)
+
+
+def test_seeded_pipelined_matches_unpipelined(ds, machine_scores):
+    scens = build_scenarios(ds, workloads=WORKLOAD_NAMES[:2],
+                            seeds=(0, 1), conditions=(HEALTHY,))
+    ref = replay_scenarios(ds, scens, machine_scores)
+    got, stats = replay_pipelined(ds, scens, machine_scores,
+                                  block_lanes=8, seeded=True,
+                                  return_stats=True)
+    _assert_same_traces(ref, got)
+    assert stats["blocks"] == stats["dispatches"] == 2
+
+
+def test_seeded_replay_compile_amortized(ds, machine_scores):
+    """Replays of equally-shaped seeded specs reuse one program, and
+    condition counts pad to pow2 so 1- and 2-condition matrices of the
+    same lane shape can differ in program only via that padded axis."""
+    cfg = ReplayConfig()
+    scens = build_scenarios(ds, workloads=WORKLOAD_NAMES[:2],
+                            seeds=(0, 1), conditions=(HEALTHY,))
+    spec = lane_spec(ds, scens, machine_scores, cfg)
+    replay_seeded(spec, cfg)  # compile (or reuse)
+    with expect_traces(REPLAY_TRACES, 0):
+        r1 = replay_seeded(spec, cfg)
+        r2 = replay_seeded(spec, cfg)
+    np.testing.assert_array_equal(r1.chosen, r2.chosen)
+    assert r1.dispatches == 1
+
+
 # ------------------------------------------- sharded lane axis (slow)
 
 @pytest.mark.slow
@@ -365,9 +433,9 @@ def test_sharded_replay_bit_identical_subprocess():
         import numpy as np
         from repro.optimizer import (HEALTHY, FleetCondition,
                                      ReplayConfig, build_scenarios,
-                                     lane_tables, replay,
+                                     lane_spec, lane_tables, replay,
                                      replay_pipelined, replay_scenarios,
-                                     traces_from_result)
+                                     replay_seeded, traces_from_result)
         from repro.tuning.scout import ScoutDataset, VM_TYPES
 
         assert jax.device_count() == 8
@@ -388,14 +456,26 @@ def test_sharded_replay_bit_identical_subprocess():
         assert np.array_equal(single.chosen, sharded.chosen)
         assert np.array_equal(single.count, sharded.count)
 
+        # seeded spec: tables generated inside the sharded program,
+        # noise re-drawn per shard from fold-in keys
+        spec = lane_spec(ds, scens, scores, cfg)
+        seeded = replay_seeded(spec, cfg, devices=jax.devices())
+        assert np.array_equal(single.chosen, seeded.chosen)
+        assert np.array_equal(single.count, seeded.count)
+
         ref = traces_from_result(tab, single, ds.configs)
         piped = replay_pipelined(ds, scens, scores, cfg,
                                  block_lanes=64,
                                  devices=jax.devices())
-        for a, b in zip(ref, piped):
-            assert [c.key for c in a.evaluated] == \\
-                [c.key for c in b.evaluated]
-            assert a.best_valid_cost == b.best_valid_cost
+        piped_seeded = replay_pipelined(ds, scens, scores, cfg,
+                                        block_lanes=64, seeded=True,
+                                        devices=jax.devices())
+        for a, b, c in zip(ref, piped, piped_seeded):
+            assert [x.key for x in a.evaluated] == \\
+                [x.key for x in b.evaluated] == \\
+                [x.key for x in c.evaluated]
+            assert a.best_valid_cost == b.best_valid_cost \\
+                == c.best_valid_cost
         print("OK bit-identical across", jax.device_count(), "devices")
     """)
     env = dict(os.environ)
