@@ -17,6 +17,14 @@ same new-row scores:
   (``shard_map`` over the request axis; run under
   ``XLA_FLAGS=--xla_force_host_platform_device_count=8`` to see >1).
 
+A fourth section drives the streaming :class:`IngestionDaemon` over
+seeded bursty telemetry (``fleet.daemon.*`` rows): sustained req/s and
+p99 queue latency on a clean burst stream, then a fault storm
+(dropout, duplicates, reordering, NaN/Inf corruption) against a tight
+staging ring — asserting the robustness invariants: ring memory stays
+bounded, duplicates and corrupt rows are dropped/quarantined exactly,
+and no non-finite value ever reaches the scorer or the store.
+
 Scoring throughput does not depend on the parameter values, so the
 model stays untrained (init only).
 """
@@ -164,6 +172,88 @@ def _run_append_throughput(rows, n_rounds: int = 240,
         "store appends are no longer amortized O(chunk)")
 
 
+def _run_daemon(rows, machines, history, pre, model, params,
+                quick: bool):
+    """Streaming-daemon section: sustained req/s + p99 queue latency
+    under seeded bursty arrivals, and the fault-path counters (shed /
+    degraded / quarantined) under an injected fault storm with a tight
+    staging ring. Asserts the robustness invariants the daemon exists
+    for: bounded ring memory and zero corrupt rows reaching the
+    scorer."""
+    import numpy as np
+
+    from repro.fleet import (FaultPlan, FleetScoringService,
+                             IngestionDaemon, fleet_telemetry,
+                             inject_faults)
+
+    n_rounds = 6 if quick else 10
+
+    # clean, bursty arrivals: honest queue latencies via the virtual
+    # clock folding in measured flush durations
+    svc = FleetScoringService(model, params, pre, sharded=False)
+    svc.seed_history(history)
+    svc.score_round(fleet_telemetry(  # warm (compile)
+        machines, rounds=1, runs_per_type=1, seed=90)[0].frame)
+    daemon = IngestionDaemon(svc, capacity_rows=64 * len(machines),
+                             flush_interval=0.25, min_flush_gap=0.02)
+    events = fleet_telemetry(machines, rounds=n_rounds,
+                             runs_per_type=1, seed=91, interval=1.0,
+                             jitter=0.3)
+    bursty, _ = inject_faults(events, FaultPlan(seed=92, burst=0.3,
+                                                burst_window=2.0))
+    daemon.run(bursty)
+    st = daemon.stats()
+    req_s = st["events_seen"] / max(st["run_wall_s"], 1e-9)
+    rows.append(("fleet.daemon.sustained_req_per_s",
+                 f"{st['run_wall_s'] / max(st['events_seen'], 1) * 1e6:.0f}",
+                 f"{req_s:.1f}"))
+    rows.append(("fleet.daemon.p99_queue_latency_s", "",
+                 f"{st['latency_p99']:.4f}"))
+    rows.append(("fleet.daemon.events", "", st["events_seen"]))
+    assert st["peak_staged_rows"] <= st["capacity_rows"]
+
+    # fault storm against a tight ring: the backpressure ladder and
+    # the quarantine must hold the line
+    svc_f = FleetScoringService(model, params, pre, sharded=False)
+    svc_f.seed_history(history)
+    capacity = 4 * len(machines)
+    # overload regime: row trigger off, long deadline, gated consumer
+    # -> arrivals outrun the scorer and the ladder must hold the ring
+    daemon_f = IngestionDaemon(svc_f, capacity_rows=capacity,
+                               flush_interval=1.5,
+                               flush_rows=1 << 30,
+                               min_flush_gap=1.0, degrade_after=3)
+    faulty, log = inject_faults(
+        fleet_telemetry(machines, rounds=n_rounds, runs_per_type=2,
+                        seed=93, interval=0.2, jitter=0.1),
+        FaultPlan(seed=94, dropout=0.05, delay=0.2, duplicate=0.25,
+                  reorder=0.2, corrupt=0.2, burst=0.3,
+                  burst_window=1.0))
+    daemon_f.run(faulty)
+    st_f = daemon_f.stats()
+    rows.append(("fleet.daemon.faulty.peak_staged_rows", "",
+                 f"{st_f['peak_staged_rows']}/{capacity}"))
+    rows.append(("fleet.daemon.faulty.shed_rows", "",
+                 st_f["shed_rows"]))
+    rows.append(("fleet.daemon.faulty.degraded_flushes", "",
+                 st_f["degraded_flushes"]))
+    rows.append(("fleet.daemon.faulty.duplicates_dropped", "",
+                 st_f["duplicates_dropped"]))
+    rows.append(("fleet.daemon.faulty.quarantined_rows", "",
+                 svc_f.stats["quarantined_rows"]))
+    # robustness invariants (the acceptance criteria of the daemon)
+    assert st_f["peak_staged_rows"] <= capacity, (
+        "staging ring exceeded its bound under the fault storm")
+    assert st_f["duplicates_dropped"] == len(log.duplicated)
+    assert svc_f.stats["quarantined_rows"] == log.corrupted_rows
+    f = svc_f.store.frame
+    assert np.isfinite(np.where(f.metrics_present, f.metrics,
+                                0.0)).all(), (
+        "corrupt rows reached the scorer/store")
+    return {"daemon_rounds": n_rounds, "daemon_capacity": capacity,
+            "fault_counts": log.counts()}
+
+
 def run(rows, n_nodes: int = 32, context_runs: int = 16,
         n_rounds: int = 4, quick: bool = False):
     import jax
@@ -217,7 +307,9 @@ def run(rows, n_nodes: int = 32, context_runs: int = 16,
     rows.append(("fleet.batched.traces", "", svc.trace_count))
     rows.append(("fleet.store_rows", "", svc.stats["store_rows"]))
     _run_append_throughput(rows, n_rounds=120 if quick else 240)
+    daemon_params = _run_daemon(rows, machines, history, pre, model,
+                                params, quick)
     # workload parameters, recorded into BENCH_fleet.json by run.py
     return {"n_nodes": n_nodes, "context_runs": context_runs,
             "n_rounds": n_rounds, "burst": burst, "window": window,
-            "devices": jax.device_count()}
+            "devices": jax.device_count(), **daemon_params}

@@ -33,6 +33,8 @@ import numpy as np
 # bumping one re-rolls every draw downstream of that stream
 STREAM_WORKLOAD_PARAMS = 31  # scout workload latent demand vectors
 STREAM_CONTENTION = 32  # scout per-(workload, config) contention noise
+STREAM_ARRIVALS = 33  # fleet telemetry arrival-process jitter
+STREAM_FAULTS = 34  # fleet fault-injection decisions (fleet.faults)
 
 
 def root_key(seed: int):

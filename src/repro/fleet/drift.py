@@ -17,7 +17,7 @@ series are ordered by (t, row id), matching the store's view order.
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, Optional
+from typing import Dict, Optional, Sequence
 
 import numpy as np
 
@@ -124,6 +124,94 @@ def drift_report(store: FingerprintStore, alpha: float = 0.3,
             aspect_ewma=aspect_ewma, aspect_mean=aspect_mean,
             last_t=float(frame.t[sel[-1]]))
     return out
+
+
+class RollingDrift:
+    """Incremental per-flush drift state: the same per-node anomaly
+    EWMA / lifetime mean and per-aspect quality EWMAs as
+    :func:`drift_report`, folded forward O(new rows) per flush instead
+    of recomputed over the stored history — the long-lived ingestion
+    daemon's drift path. When every scored row is fed through
+    :meth:`update` in the store's (t, row) order (the streaming
+    cadence), :meth:`report` is equal to ``drift_report(store)``
+    (asserted in ``tests/test_ingest.py``)."""
+
+    def __init__(self, alpha: float = 0.3):
+        self.alpha = alpha
+        self._nodes: Dict[str, dict] = {}
+
+    def observe(self, node: str, t_last: float, probs: np.ndarray,
+                aspects: Sequence[Optional[str]],
+                quality: np.ndarray) -> None:
+        """Fold one flush's new scored rows (chronological) for one
+        node into the running state. ``aspects``/``quality`` are
+        row-aligned with ``probs``; rows with aspect ``None`` update
+        only the anomaly series."""
+        st = self._nodes.setdefault(
+            node, {"ewma": None, "sum": 0.0, "n": 0, "last_t": t_last,
+                   "aspects": {}})
+        a = self.alpha
+        for p in np.asarray(probs, np.float64):
+            st["ewma"] = (p if st["ewma"] is None
+                          else (1 - a) * st["ewma"] + a * p)
+            st["sum"] += p
+            st["n"] += 1
+        st["last_t"] = max(st["last_t"], t_last)
+        for asp, q in zip(aspects, np.asarray(quality, np.float64)):
+            if asp is None:
+                continue
+            ast = st["aspects"].setdefault(
+                asp, {"ewma": None, "sum": 0.0, "n": 0})
+            ast["ewma"] = (q if ast["ewma"] is None
+                           else (1 - a) * ast["ewma"] + a * q)
+            ast["sum"] += q
+            ast["n"] += 1
+
+    def update(self, store: FingerprintStore, results) -> None:
+        """Fold a flush's results (``{node: FleetResult}``) into the
+        running state; aspect/quality columns are derived from the
+        store rows the results point at (row ids -> benchmark types ->
+        aspects, codes -> §III-D quality scores)."""
+        frame = store.frame
+        if frame is None:
+            return
+        row_id = store.row_id
+        order = None
+        if not bool(np.all(np.diff(row_id) >= 0)):
+            order = np.argsort(row_id)  # compacted stores only
+        for node in sorted(results):
+            r = results[node]
+            if len(r.row_ids) == 0:
+                continue
+            if order is None:
+                idx = np.searchsorted(row_id, r.row_ids)
+            else:
+                idx = order[np.searchsorted(row_id[order], r.row_ids)]
+            aspects = [ASPECT_OF_TYPE.get(frame.benchmark_types[c])
+                       for c in frame.type_code[idx]]
+            # float32 codes, like the store keeps them: bit-equal to
+            # what drift_report computes over the attached history
+            quality = code_scores(np.asarray(r.codes, np.float32))
+            self.observe(node, float(frame.t[idx].max()),
+                         r.anomaly_prob, aspects, quality)
+
+    def report(self) -> Dict[str, NodeDrift]:
+        """Current state as :class:`NodeDrift` summaries (same shape
+        as :func:`drift_report`'s)."""
+        out: Dict[str, NodeDrift] = {}
+        for node, st in self._nodes.items():
+            if st["n"] == 0:
+                continue
+            out[node] = NodeDrift(
+                node=node, n_scored=st["n"],
+                anomaly_ewma=float(st["ewma"]),
+                anomaly_mean=st["sum"] / st["n"],
+                aspect_ewma={a: float(s["ewma"])
+                             for a, s in st["aspects"].items()},
+                aspect_mean={a: s["sum"] / s["n"]
+                             for a, s in st["aspects"].items()},
+                last_t=st["last_t"])
+        return out
 
 
 def degrading_nodes(report: Dict[str, NodeDrift],

@@ -83,7 +83,8 @@ class FleetScoringService:
                  context_per_chain: Optional[int] = None,
                  min_bucket: int = MIN_BUCKET,
                  sharded: bool = True,
-                 devices: Optional[Sequence] = None):
+                 devices: Optional[Sequence] = None,
+                 on_invalid: str = "quarantine"):
         import jax
 
         from repro.core.graph_data import P_PREDECESSORS
@@ -97,30 +98,86 @@ class FleetScoringService:
             context_per_chain if context_per_chain is not None
             else P_PREDECESSORS * max(1, model.cfg.tag_hops))
         self.min_bucket = min_bucket
+        if on_invalid not in ("quarantine", "raise", "off"):
+            raise ValueError(f"unknown on_invalid policy {on_invalid!r}")
+        self.on_invalid = on_invalid
         if devices is None:
             devices = jax.devices() if sharded else jax.devices()[:1]
         self.scorer = ShardedScorer(model, preproc, devices=devices)
         self._pending: List[object] = []  # frames queued for flush
+        self._quarantine: List[object] = []  # rejected rows, as frames
         self._requests_served = 0
         self._rows_scored = 0
         self._flushes = 0
         self._dispatches = 0
+        self._quarantined_nonfinite = 0
+        self._quarantined_unknown_type = 0
         self._wall_s = 0.0
+
+    # --------------------------------------------------------- validation
+    def validate_frame(self, frame) -> Dict[str, np.ndarray]:
+        """Row masks of telemetry that must never reach the scorer:
+        ``nonfinite`` (NaN/Inf in a present metric/gauge cell or the
+        timestamp — they would poison the normalized feature cache and
+        every padded batch they share a dispatch with) and
+        ``unknown_type`` (benchmark types the preprocessor was never
+        fitted on — unscorable, and ``type_ids`` would raise)."""
+        known = set(self.preproc.benchmark_types or ())
+        bad_type_codes = [c for c, name
+                          in enumerate(frame.benchmark_types)
+                          if name not in known]
+        unknown = np.isin(frame.type_code, bad_type_codes)
+        nonfinite = (
+            ~np.isfinite(np.where(frame.metrics_present,
+                                  frame.metrics, 0.0)).all(axis=1)
+            | ~np.isfinite(np.where(frame.node_metrics_present,
+                                    frame.node_metrics, 0.0)).all(axis=1)
+            | ~np.isfinite(frame.t))
+        return {"nonfinite": nonfinite, "unknown_type": unknown}
+
+    def _admit(self, frame):
+        """Apply the ``on_invalid`` policy; returns the clean subset
+        (or the frame untouched when validation is off)."""
+        if self.on_invalid == "off":
+            return frame
+        masks = self.validate_frame(frame)
+        bad = masks["nonfinite"] | masks["unknown_type"]
+        if not bad.any():
+            return frame
+        n_nf = int(masks["nonfinite"].sum())
+        n_ut = int((masks["unknown_type"] & ~masks["nonfinite"]).sum())
+        if self.on_invalid == "raise":
+            raise ValueError(
+                f"rejected {int(bad.sum())} telemetry rows: {n_nf} "
+                f"with NaN/Inf metric values, {n_ut} with benchmark "
+                "types the preprocessor was not fitted on")
+        self._quarantined_nonfinite += n_nf
+        self._quarantined_unknown_type += n_ut
+        self._quarantine.append(frame.select(np.nonzero(bad)[0]))
+        return frame.select(np.nonzero(~bad)[0])
+
+    @property
+    def quarantine(self) -> List[object]:
+        """Quarantined (rejected) rows, as frames, in intake order."""
+        return list(self._quarantine)
 
     # ------------------------------------------------------------- intake
     def submit(self, data: FrameOrRecords) -> None:
         """Queue new executions for the next flush. Rows are grouped
         into per-node requests by their machine column at flush time,
-        so a frame may carry one node's round or a whole fleet
-        round."""
-        frame = as_frame(data)
+        so a frame may carry one node's round or a whole fleet round.
+        Rows with NaN/Inf metrics or unfitted benchmark types are
+        quarantined (or rejected, per ``on_invalid``) — they never
+        reach the store or the jitted scorer."""
+        frame = self._admit(as_frame(data))
         if len(frame):
             self._pending.append(frame)
 
     def seed_history(self, data: FrameOrRecords) -> None:
         """Append unscored context rows (e.g. a prior acquisition) with
-        their cached feature columns."""
-        frame = as_frame(data)
+        their cached feature columns (validated like submissions —
+        poisoned context would contaminate every later request)."""
+        frame = self._admit(as_frame(data))
         if len(frame):
             self.store.append(
                 frame, features=prepare_features(self.preproc, frame))
@@ -129,9 +186,7 @@ class FleetScoringService:
                     ) -> Dict[str, "FleetResult"]:
         """Convenience: queue a whole (multi-node) re-fingerprinting
         round and flush once; one request per node in the round."""
-        frame = as_frame(data)
-        if len(frame):
-            self._pending.append(frame)
+        self.submit(data)
         return self.flush()
 
     # -------------------------------------------------------------- flush
@@ -218,6 +273,10 @@ class FleetScoringService:
             "rows_scored": self._rows_scored,
             "flushes": self._flushes,
             "dispatches": self._dispatches,
+            "quarantined_nonfinite": self._quarantined_nonfinite,
+            "quarantined_unknown_type": self._quarantined_unknown_type,
+            "quarantined_rows": (self._quarantined_nonfinite
+                                 + self._quarantined_unknown_type),
             "traces": self.scorer.trace_count,
             "devices": self.scorer.n_devices,
             "store_rows": len(self.store),

@@ -28,11 +28,15 @@ append-round throughput. Vocabulary growth is in-place; only a
 one-off O(total) column widening.
 
 ``save``/``load`` round-trip the whole store through one ``.npz`` file
-for durability.
+for durability; saves are atomic (temp file + ``os.replace``), so a
+crash mid-save never corrupts the previous snapshot.
 """
 
 from __future__ import annotations
 
+import contextlib
+import os
+import tempfile
 from typing import Dict, List, Optional, Tuple
 
 import numpy as np
@@ -43,6 +47,26 @@ from repro.fingerprint.frame import (BenchmarkFrame, FrameOrRecords,
 FEATURE_KEYS = ("raw", "present", "type_ids", "edge_raw")
 
 _MIN_CAP = 64
+
+
+def atomic_savez(path: str, **payload) -> None:
+    """Crash-safe ``np.savez_compressed``: write to a temp file in the
+    target's directory, then ``os.replace`` — a crash mid-save leaves
+    the previous snapshot intact instead of a truncated ``.npz``.
+    Shared by :meth:`FingerprintStore.save` and the ingestion daemon's
+    staging checkpoints."""
+    path = os.path.abspath(path)
+    fd, tmp = tempfile.mkstemp(dir=os.path.dirname(path),
+                               prefix=os.path.basename(path) + ".",
+                               suffix=".tmp")
+    try:
+        with os.fdopen(fd, "wb") as fh:
+            np.savez_compressed(fh, **payload)
+        os.replace(tmp, path)
+    except BaseException:
+        with contextlib.suppress(OSError):
+            os.remove(tmp)
+        raise
 
 
 class _IntVec:
@@ -484,11 +508,13 @@ class FingerprintStore:
 
     # ---------------------------------------------------------- save/load
     def save(self, path: str) -> None:
-        """Durable one-file snapshot (compressed .npz)."""
+        """Durable one-file snapshot (compressed .npz). The write is
+        atomic (:func:`atomic_savez`): a crash mid-save can never leave
+        a corrupt or truncated snapshot behind."""
         f = self.frame
         if f is None:
-            np.savez_compressed(path, empty=np.asarray(True),
-                                next_id=np.asarray(self._next_id))
+            atomic_savez(path, empty=np.asarray(True),
+                         next_id=np.asarray(self._next_id))
             return
         payload = {
             "empty": np.asarray(False),
@@ -512,7 +538,7 @@ class FingerprintStore:
         if self._features is not None:
             for k in FEATURE_KEYS:
                 payload[f"feat_{k}"] = self.features[k]
-        np.savez_compressed(path, **payload)
+        atomic_savez(path, **payload)
 
     @classmethod
     def load(cls, path: str) -> "FingerprintStore":

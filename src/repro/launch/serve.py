@@ -30,6 +30,18 @@ request batch sharded across 8 virtual CPU devices:
     XLA_FLAGS=--xla_force_host_platform_device_count=8 \
         PYTHONPATH=src python -m repro.launch.serve --fleet \
         --nodes 16 --rounds 10
+
+``--daemon`` runs the streaming ingestion daemon over the same
+service: seeded per-node telemetry events (bursty arrivals) stream
+through the bounded staging ring with deadline/row-bucket flushes, and
+the run reports sustained req/s, p99 queue latency and the rolling
+drift flags. Add ``--faults`` to route the stream through the seeded
+fault injector (dropout, delays, duplicates, reordering, NaN/Inf
+corruption, bursts, one genuinely degraded node) and watch the
+backpressure/quarantine counters and the degradation flag:
+
+    PYTHONPATH=src python -m repro.launch.serve --daemon --faults \
+        --nodes 6 --rounds 12
 """
 
 from __future__ import annotations
@@ -229,6 +241,46 @@ def serve_fleet(nodes: int = 16, rounds: int = 10,
             (worst.node, round(worst.anomaly_ewma, 3))}
 
 
+def serve_daemon(nodes: int = 6, rounds: int = 12,
+                 runs_per_type: int = 1, seed: int = 0,
+                 faults: bool = False) -> dict:
+    """Streaming ingestion loop: telemetry events through the bounded
+    staging ring of an :class:`repro.fleet.IngestionDaemon`, optionally
+    perturbed by the seeded fault injector (``faults=True`` also marks
+    one node genuinely degraded halfway through the run)."""
+    from repro.fleet import (FaultPlan, FleetScoringService,
+                             IngestionDaemon, fleet_telemetry,
+                             inject_faults)
+
+    machines = {f"fleet-{i}": "e2-medium" for i in range(nodes)}
+    _, frame, pre, model, params = _trained_perona(
+        machines, runs_per_type=10, seed=seed)
+
+    service = FleetScoringService(model, params, pre,
+                                  context_per_chain=16)
+    service.seed_history(frame)
+    daemon = IngestionDaemon(service, capacity_rows=64 * nodes,
+                             flush_interval=0.5,
+                             min_flush_gap=0.05)
+    degraded_node = f"fleet-{nodes - 1}"
+    events = fleet_telemetry(
+        machines, rounds=rounds, runs_per_type=runs_per_type,
+        seed=seed + 1, interval=1.0, jitter=0.25,
+        degraded={degraded_node: rounds // 2} if faults else None)
+    fault_counts = None
+    if faults:
+        events, log = inject_faults(events, FaultPlan(
+            seed=seed + 2, dropout=0.05, delay=0.2, duplicate=0.2,
+            reorder=0.2, corrupt=0.15, burst=0.2, burst_window=3.0))
+        fault_counts = log.counts()
+    daemon.run(events)
+    st = daemon.stats()
+    return {"rounds": rounds, "stats": st,
+            "faults": fault_counts,
+            "degraded_node": degraded_node if faults else None,
+            "flagged": daemon.flagged_nodes()}
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="smollm-135m")
@@ -243,6 +295,13 @@ def main() -> None:
     ap.add_argument("--fleet", action="store_true",
                     help="raw fleet service loop (micro-batched, "
                          "sharded scoring + drift report)")
+    ap.add_argument("--daemon", action="store_true",
+                    help="streaming ingestion daemon over the fleet "
+                         "service (bounded staging, deadline/row "
+                         "flushes, rolling drift)")
+    ap.add_argument("--faults", action="store_true",
+                    help="with --daemon: inject seeded stream faults "
+                         "+ one genuinely degraded node")
     ap.add_argument("--nodes", type=int, default=16,
                     help="fleet size for --fleet")
     ap.add_argument("--rounds", type=int, default=10)
@@ -254,6 +313,33 @@ def main() -> None:
               f"executions, {out['seconds']:.2f}s "
               f"({out['scored'] / max(out['seconds'], 1e-9):.0f} exec/s), "
               f"{out['traces']} compiles, excluded={out['excluded']}")
+        return
+
+    if args.daemon:
+        out = serve_daemon(args.nodes, args.rounds, seed=args.seed,
+                           faults=args.faults)
+        st = out["stats"]
+        svc = st["service"]
+        req_s = st["events_seen"] / max(st["run_wall_s"], 1e-9)
+        print(f"[serve-daemon] {out['rounds']} rounds, "
+              f"{st['events_seen']} events ({st['rows_staged_total']} "
+              f"rows), {req_s:.1f} sustained req/s, "
+              f"p99 queue latency {st['latency_p99']:.3f}s, "
+              f"peak staging {st['peak_staged_rows']}/"
+              f"{st['capacity_rows']} rows")
+        print(f"[serve-daemon] flushes: {st['deadline_flushes']} "
+              f"deadline / {st['row_trigger_flushes']} row-trigger / "
+              f"{st['forced_flushes']} forced / "
+              f"{st['drain_flushes']} drain; backpressure: "
+              f"{st['shed_rows']} shed rows, "
+              f"{st['degraded_flushes']} degraded flushes "
+              f"({st['degrade_unscored_rows']} sampled-out rows); "
+              f"dedup dropped {st['duplicates_dropped']}; "
+              f"quarantined {svc['quarantined_rows']} rows")
+        if out["faults"] is not None:
+            print(f"[serve-daemon] injected faults: {out['faults']}; "
+                  f"degraded node {out['degraded_node']} -> "
+                  f"flagged={out['flagged']}")
         return
 
     if args.fleet:

@@ -123,6 +123,43 @@ def test_store_save_load_roundtrip(setup, tmp_path):
     assert loaded.append(frame.select(np.arange(3))) == len(store)
 
 
+def test_store_save_is_atomic_under_interruption(setup, tmp_path,
+                                                 monkeypatch):
+    """A crash mid-save must never corrupt an existing store file:
+    the write goes to a temp file in the same directory and only an
+    ``os.replace`` publishes it."""
+    import repro.fleet.store as store_mod
+
+    _, _, frame, *_ = setup
+    store = FingerprintStore()
+    store.append(frame)
+    path = os.path.join(tmp_path, "store.npz")
+    store.save(path)
+
+    more = FingerprintStore()
+    more.append(frame)
+    more.append(frame.select(np.arange(5)))
+    real_savez = np.savez_compressed
+
+    def exploding_savez(fh, **payload):
+        real_savez(fh, **{k: payload[k]
+                          for k in list(payload)[: len(payload) // 2]})
+        raise OSError("disk full")
+
+    monkeypatch.setattr(store_mod.np, "savez_compressed",
+                        exploding_savez)
+    with pytest.raises(OSError, match="disk full"):
+        more.save(path)
+    monkeypatch.undo()
+    # the original file is intact and loads; no temp litter remains
+    loaded = FingerprintStore.load(path)
+    assert len(loaded) == len(store)
+    np.testing.assert_array_equal(loaded.frame.metrics,
+                                  store.frame.metrics)
+    assert [f for f in os.listdir(tmp_path)
+            if f.endswith(".tmp")] == []
+
+
 def test_store_rejects_mixed_feature_appends(setup):
     _, _, frame, pre, *_ = setup
     from repro.serving.engine import prepare_features
@@ -246,6 +283,49 @@ def test_service_burst_flush_matches_sequential(setup):
         np.testing.assert_allclose(
             merged[n].anomaly_prob, np.concatenate(seq_probs[n]),
             rtol=0, atol=1e-6)
+
+
+def test_service_quarantines_invalid_telemetry(setup):
+    """NaN/Inf rows and unfitted benchmark types never reach the store
+    or the jitted scorer: they are quarantined with stats counters, the
+    clean remainder scores normally."""
+    import dataclasses
+
+    from repro.common.rng import folded_generator
+    from repro.fleet.faults import corrupt_frame
+
+    runner, machines, frame, pre, model, params = setup
+    svc = FleetScoringService(model, params, pre, sharded=False)
+    svc.seed_history(frame)
+    rnd = runner.run_frame(machines, runs_per_type=2,
+                           t_offset=86400.0)
+    bad, n_bad = corrupt_frame(rnd, folded_generator(0), n_cols=2,
+                               row_fraction=0.3)
+    assert n_bad > 0
+    results = svc.score_round(bad)
+    assert svc.stats["quarantined_nonfinite"] == n_bad
+    assert svc.stats["quarantined_rows"] == n_bad
+    scored = sum(len(r.anomaly_prob) for r in results.values())
+    assert scored == len(rnd) - n_bad
+    f = svc.store.frame
+    assert np.isfinite(np.where(f.metrics_present, f.metrics,
+                                0.0)).all()
+    assert sum(len(q) for q in svc.quarantine) == n_bad
+
+    # unfitted benchmark types are counted separately
+    alien = dataclasses.replace(
+        rnd, benchmark_types=("bogus",) + rnd.benchmark_types[1:])
+    n_alien = int((alien.type_code == 0).sum())
+    svc.submit(alien)
+    assert svc.stats["quarantined_unknown_type"] == n_alien
+
+    # the strict policy raises instead
+    strict = FleetScoringService(model, params, pre, sharded=False,
+                                 on_invalid="raise")
+    with pytest.raises(ValueError, match="NaN/Inf"):
+        strict.submit(bad)
+    with pytest.raises(ValueError, match="unknown"):
+        FleetScoringService(model, params, pre, on_invalid="bad-mode")
 
 
 # ---------------------------------------------------------------- drift
