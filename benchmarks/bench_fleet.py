@@ -25,6 +25,10 @@ staging ring — asserting the robustness invariants: ring memory stays
 bounded, duplicates and corrupt rows are dropped/quarantined exactly,
 and no non-finite value ever reaches the scorer or the store.
 
+A fifth section (``fleet.daemon.obs.*``) reruns the clean daemon
+workload with the telemetry plane enabled vs ``obs.disabled()`` and
+asserts always-on observability costs <2% sustained req/s.
+
 Scoring throughput does not depend on the parameter values, so the
 model stays untrained (init only).
 """
@@ -254,6 +258,103 @@ def _run_daemon(rows, machines, history, pre, model, params,
             "fault_counts": log.counts()}
 
 
+def _run_obs_overhead(rows, machines, history, pre, model, params,
+                      quick: bool):
+    """Telemetry-plane overhead: the same clean daemon workload with
+    the obs plane enabled (default) vs ``obs.disabled()``, asserting
+    enabled sustained req/s stays within 2% of disabled.
+
+    Intake pays no per-event registry cost by design (daemon mirrors
+    delta-sync at flush boundaries), so the enabled plane adds only
+    per-flush work — one span, one batched latency observe, a handful
+    of counter adds. Measuring that at a 2% bound on shared runners
+    (where identical runs vary by >5%) needs three defenses:
+
+    - **aggregate rates over many short interleaved reps** (order
+      rotated every rep, GC collected before each and disabled during)
+      so scheduler phases and store growth hit every variant equally;
+    - **a second disabled variant as an A/A null**: the gap between
+      the two same-code aggregates is the measured noise floor of this
+      very run, and the assertion bound widens by exactly that gap —
+      tight on quiet CI runners, honest on loaded ones (the gap is
+      reported as ``fleet.daemon.obs.noise_pct``);
+    - ``service_time_scale=0`` pins the flush cadence (see one_run).
+    """
+    import dataclasses
+    import gc
+
+    from repro import obs
+    from repro.fleet import (FleetScoringService, IngestionDaemon,
+                             fleet_telemetry)
+
+    n_rounds = 10 if quick else 16
+    svc = FleetScoringService(model, params, pre, sharded=False)
+    svc.seed_history(history)
+    svc.score_round(fleet_telemetry(  # warm (compile)
+        machines, rounds=1, runs_per_type=1, seed=80)[0].frame)
+    base = fleet_telemetry(machines, rounds=n_rounds, runs_per_type=1,
+                           seed=81, interval=0.5, jitter=0.2)
+    uid_offset = 0
+
+    def one_run():
+        # fresh uids per repetition: the shared store dedups by uid,
+        # so replaying the same telemetry would drop every event
+        nonlocal uid_offset
+        uid_offset += 1_000_000
+        events = [dataclasses.replace(e, uid=e.uid + uid_offset)
+                  for e in base]
+        # service_time_scale=0: the virtual clock advances on arrivals
+        # only, so the flush cadence — and therefore the pow2 scoring
+        # buckets — is IDENTICAL across reps. With measured flush
+        # durations folded in (the default), a slow flush shifts the
+        # next deadline, changes a bucket size, and triggers a fresh
+        # compile inside the measured window of whichever variant got
+        # there first — swamping a 2% comparison.
+        daemon = IngestionDaemon(svc,
+                                 capacity_rows=64 * len(machines),
+                                 flush_interval=0.25,
+                                 min_flush_gap=0.02,
+                                 service_time_scale=0.0)
+        daemon.run(events)
+        return daemon.stats()["run_wall_s"]
+
+    def disabled_run():
+        with obs.disabled():
+            return one_run()
+
+    one_run()  # warm the append/flush path on the shared store
+    wall = {"on": 0.0, "off": 0.0, "null": 0.0}
+    variant = {"on": one_run, "off": disabled_run,
+               "null": disabled_run}
+    order = ["on", "off", "null"]
+    reps = 12 if quick else 18
+    gc.collect()
+    gc.disable()
+    try:
+        for rep in range(reps):
+            gc.collect()
+            for key in order[rep % 3:] + order[:rep % 3]:
+                wall[key] += variant[key]()
+    finally:
+        gc.enable()
+    rate = {k: reps * len(base) / max(w, 1e-9)
+            for k, w in wall.items()}
+    noise = (abs(rate["off"] - rate["null"])
+             / max(rate["off"], rate["null"], 1e-9) * 100.0)
+    overhead = (1.0 - rate["on"] / max(rate["off"], 1e-9)) * 100.0
+    rows.append(("fleet.daemon.obs.enabled_req_per_s", "",
+                 f"{rate['on']:.1f}"))
+    rows.append(("fleet.daemon.obs.disabled_req_per_s", "",
+                 f"{rate['off']:.1f}"))
+    rows.append(("fleet.daemon.obs.overhead_pct", "",
+                 f"{overhead:.2f}"))
+    rows.append(("fleet.daemon.obs.noise_pct", "", f"{noise:.2f}"))
+    assert overhead < 2.0 + noise, (
+        f"telemetry plane costs {overhead:.2f}% sustained daemon "
+        f"req/s (enabled vs disabled; A/A noise floor {noise:.2f}%) "
+        "— budget is <2% above the measured noise floor")
+
+
 def run(rows, n_nodes: int = 32, context_runs: int = 16,
         n_rounds: int = 4, quick: bool = False):
     import jax
@@ -309,6 +410,8 @@ def run(rows, n_nodes: int = 32, context_runs: int = 16,
     _run_append_throughput(rows, n_rounds=120 if quick else 240)
     daemon_params = _run_daemon(rows, machines, history, pre, model,
                                 params, quick)
+    _run_obs_overhead(rows, machines, history, pre, model, params,
+                      quick)
     # workload parameters, recorded into BENCH_fleet.json by run.py
     return {"n_nodes": n_nodes, "context_runs": context_runs,
             "n_rounds": n_rounds, "burst": burst, "window": window,

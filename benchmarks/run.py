@@ -62,6 +62,7 @@ def main() -> None:
                             bench_kernels, bench_optimizer,
                             bench_roofline, bench_tuning,
                             bench_workflows)
+    from repro import obs
 
     n_workloads = (3 if args.smoke else 6) if quick else 18
     hpo_trials = (4 if args.smoke else 8) if quick else 32
@@ -88,6 +89,7 @@ def main() -> None:
                 "optimizer": args.optimizer_json_out}
 
     rows = [("name", "us_per_call", "derived")]
+    written = []
     for name, fn in modules:
         if args.only and args.only not in name:
             continue
@@ -114,14 +116,29 @@ def main() -> None:
                 "quick": quick,
                 "smoke": args.smoke,
                 "params": params,
+                # telemetry snapshot at write time (jit traces /
+                # dispatches / compile seconds, daemon ladder + queue
+                # latency, ...): each tracked perf trajectory carries
+                # its own diagnostics
+                "metrics": obs.registry().snapshot(),
                 "rows": [{"name": n, "us_per_call": u, "derived": d}
                          for n, u, d in rows[start:]],
             }
             with open(json_out[name], "w") as f:
                 json.dump(payload, f, indent=2)
                 f.write("\n")
+            written.append(json_out[name])
     for r in rows:
         print(",".join(str(x) for x in r))
+    if args.smoke:
+        # CI contract: every tracked BENCH_*.json written by the smoke
+        # run must carry a non-empty telemetry snapshot
+        for path in written:
+            with open(path) as f:
+                payload = json.load(f)
+            assert payload.get("metrics"), (
+                f"{path}: bench payload is missing its telemetry "
+                "'metrics' snapshot")
 
 
 if __name__ == "__main__":

@@ -41,6 +41,7 @@ import numpy as np
 
 from repro.core.graph_data import PeronaBatch
 from repro.core.model import PeronaConfig, PeronaModel
+from repro.obs.jaxstat import JitSite
 from repro.optim.adamw import AdamW
 
 
@@ -56,20 +57,13 @@ def batch_to_jnp(batch: PeronaBatch) -> Dict[str, jnp.ndarray]:
     }
 
 
-class TraceCount:
-    """Mutable jit-trace counter; tick() runs at trace time only (the
-    same pattern as ``serving.FingerprintEngine.trace_count``)."""
-
-    def __init__(self):
-        self.count = 0
-
-    def tick(self):
-        self.count += 1
-
-
 #: Ticked once per tracing of the scanned trainer (shared by the single
-#: trainer and the vmapped HPO buckets).
-TRAINER_TRACES = TraceCount()
+#: trainer and the vmapped HPO buckets). A registry-backed
+#: :class:`repro.obs.jaxstat.JitSite`: ``tick()`` runs at trace time
+#: only, ``count`` reads the tracing counter, and wrapping the
+#: compiled call in ``dispatch()`` splits its wall time into
+#: compile-vs-run registry counters.
+TRAINER_TRACES = JitSite("core.trainer")
 
 
 @dataclasses.dataclass
@@ -236,14 +230,20 @@ def train_perona(model: PeronaModel, train_batch: PeronaBatch,
     fn = _jitted_train_fn(canonical_model(model), epochs, patience,
                           has_val)
     t0 = TRAINER_TRACES.count
-    if has_val:
-        vb = batch_to_jnp(val_batch)
-        y_val = jnp.asarray(val_batch.anomaly)
-        out = fn(params0, tb, vb, y_val, hypers, key)
-    else:
-        out = fn(params0, tb, hypers, key)
+    c0, r0 = TRAINER_TRACES.compile_seconds, TRAINER_TRACES.run_seconds
+    with TRAINER_TRACES.dispatch(
+            "trainer.train",
+            args={"epochs": epochs, "has_val": has_val}):
+        if has_val:
+            vb = batch_to_jnp(val_batch)
+            y_val = jnp.asarray(val_batch.anomaly)
+            out = fn(params0, tb, vb, y_val, hypers, key)
+        else:
+            out = fn(params0, tb, hypers, key)
     stats = {"device_dispatches": 1,
-             "traced": TRAINER_TRACES.count - t0}
+             "traced": TRAINER_TRACES.count - t0,
+             "compile_s": TRAINER_TRACES.compile_seconds - c0,
+             "run_s": TRAINER_TRACES.run_seconds - r0}
 
     tl = np.asarray(out["train_loss"])
     history = []

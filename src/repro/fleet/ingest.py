@@ -60,6 +60,9 @@ from repro.fingerprint.frame import BenchmarkFrame, concat_frames
 from repro.fleet.drift import RollingDrift, degrading_nodes
 from repro.fleet.faults import TelemetryEvent
 from repro.fleet.store import atomic_savez
+from repro.obs import metrics as obs_metrics
+from repro.obs import trace as obs_trace
+from repro.obs.jaxstat import instance_site
 
 
 @dataclasses.dataclass
@@ -87,7 +90,8 @@ class IngestionDaemon:
                  service_time_scale: float = 1.0,
                  drift_alpha: float = 0.3,
                  dedup_window: int = 4096,
-                 max_latencies: int = 100_000):
+                 max_latencies: int = 100_000,
+                 tracer: Optional[obs_trace.Tracer] = None):
         if capacity_rows <= 0:
             raise ValueError("capacity_rows must be positive")
         self.service = service
@@ -116,8 +120,6 @@ class IngestionDaemon:
         self._stop = threading.Event()
         self._sources: List[Callable[[float],
                                      Sequence[TelemetryEvent]]] = []
-        self._latencies: collections.deque = collections.deque(
-            maxlen=max_latencies)
         self._results: Dict[str, List] = {}
         self._closed = False
         self.degraded = False
@@ -141,6 +143,40 @@ class IngestionDaemon:
         self._peak_staged_rows = 0
         self._flush_wall_s = 0.0
         self._run_wall_s = 0.0
+        # --- telemetry plane ---------------------------------------
+        # The daemon owns a tracer on its OWN clock (``self.now``):
+        # virtual time under run(), wall time under serve() — flush
+        # spans and ladder instants line up with the latencies the
+        # daemon reports in either mode. Program-logic counters above
+        # stay plain ints (they must survive obs.disable()); the
+        # registry rows below are observability mirrors, delta-synced
+        # at flush boundaries (``_sync_mirrors``) so intake itself
+        # never pays per-event registry cost.
+        self.site = instance_site("fleet.ingest")
+        self.tracer = (tracer if tracer is not None
+                       else obs_trace.Tracer(clock=lambda: self.now))
+        reg = obs_metrics.registry()
+        self._m_events = reg.counter("ingest.events_seen",
+                                     daemon=self.site)
+        self._m_accepted = reg.counter("ingest.events_accepted",
+                                       daemon=self.site)
+        self._m_rows = reg.counter("ingest.rows_staged",
+                                   daemon=self.site)
+        self._m_dups = reg.counter("ingest.duplicates_dropped",
+                                   daemon=self.site)
+        self._m_flushes = reg.counter("ingest.flushes",
+                                      daemon=self.site)
+        self._m_ladder = {
+            step: reg.counter("ingest.ladder", step=step,
+                              daemon=self.site)
+            for step in ("block", "shed", "degrade", "recover")}
+        # queue latency (arrival -> scoring flush) through the shared
+        # streaming histogram: exact np.quantile semantics up to
+        # ``max_latencies`` samples (the old deque window), O(1)
+        # log-bucket memory beyond
+        self._latency = reg.histogram("ingest.queue_latency_s",
+                                      exact_limit=max_latencies,
+                                      daemon=self.site)
 
     # ------------------------------------------------------------- intake
     def push(self, frame: BenchmarkFrame, *, now: Optional[float] = None,
@@ -218,6 +254,22 @@ class IngestionDaemon:
                                          self._staged_rows)
             return True
 
+    def _sync_mirrors(self) -> None:
+        """Fold the plain program-logic counters into their registry
+        mirrors (delta since the last sync). Runs at flush boundaries
+        only, so per-event intake pays zero registry cost — the <2%
+        telemetry-overhead budget ``bench_fleet`` asserts."""
+        if not obs_metrics.enabled():
+            return
+        for mirror, total in (
+                (self._m_events, self._events_seen),
+                (self._m_accepted, self._events_accepted),
+                (self._m_rows, self._rows_staged_total),
+                (self._m_dups, self._duplicates_dropped)):
+            delta = total - int(mirror.value)
+            if delta:
+                mirror.add(delta)
+
     def _remember_uid(self, uid: int) -> None:
         if (self._uid_order.maxlen is not None
                 and len(self._uid_order) == self._uid_order.maxlen):
@@ -232,6 +284,11 @@ class IngestionDaemon:
         if self.now - self._last_flush >= self.min_flush_gap:
             self._blocked_events += 1
             self._forced_flushes += 1
+            self._m_ladder["block"].inc()
+            self.tracer.instant("ladder.block", obs_trace.CAT_LADDER,
+                                args={"staged_rows": self._staged_rows,
+                                      "incoming": n},
+                                ts=self.now)
             self._note_overload()
             self._flush(trigger="forced")
 
@@ -279,7 +336,11 @@ class IngestionDaemon:
             newest_global = np.zeros(len(ts), bool)
             newest_global[order[-self.capacity_rows:]] = True
             keep &= newest_global
-        self._shed_rows += int((~keep).sum())
+        n_shed = int((~keep).sum())
+        self._shed_rows += n_shed
+        self._m_ladder["shed"].inc()
+        self.tracer.instant("ladder.shed", obs_trace.CAT_LADDER,
+                            args={"rows": n_shed}, ts=self.now)
         owners_arr = np.asarray(owners)
         kept_staged: List[_Staged] = []
         rows_after = 0
@@ -308,6 +369,11 @@ class IngestionDaemon:
                 and self._overload_in_window >= self.degrade_after):
             self.degraded = True
             self._degrade_entries += 1
+            self._m_ladder["degrade"].inc()
+            self.tracer.instant(
+                "ladder.degrade", obs_trace.CAT_LADDER,
+                args={"overloads": self._overload_in_window},
+                ts=self.now)
 
     # -------------------------------------------------------------- flush
     def _deadline(self) -> Optional[float]:
@@ -338,6 +404,11 @@ class IngestionDaemon:
             if self.degraded and self._clean_windows >= self.recover_after:
                 self.degraded = False
                 self._recoveries += 1
+                self._m_ladder["recover"].inc()
+                self.tracer.instant(
+                    "ladder.recover", obs_trace.CAT_LADDER,
+                    args={"clean_windows": self._clean_windows},
+                    ts=self.now)
         self._overload_in_window = 0
 
     def flush(self) -> Dict[str, object]:
@@ -353,8 +424,11 @@ class IngestionDaemon:
             self._last_flush = self.now
             return {}
         t0 = time.perf_counter()
-        for s in staged:
-            self._latencies.append(self.now - s.arrival)
+        start_now = self.now
+        n_rows = sum(len(s.frame) for s in staged)
+        was_degraded = self.degraded
+        self._latency.observe_many(
+            [self.now - s.arrival for s in staged])
         staged.sort(key=lambda s: float(s.frame.t.min()))
         if self.degraded:
             self._degraded_flushes += 1
@@ -369,6 +443,15 @@ class IngestionDaemon:
         self._flush_wall_s += dt
         self.now += dt * self.service_time_scale
         self._last_flush = self.now
+        self._m_flushes.inc()
+        self._sync_mirrors()
+        # the span lives in the daemon's clock domain: under run() its
+        # duration is the *virtual* service time this flush consumed
+        self.tracer.complete("ingest.flush", obs_trace.CAT_HOST,
+                             ts=start_now, dur=self.now - start_now,
+                             args={"trigger": trigger, "rows": n_rows,
+                                   "events": len(staged),
+                                   "degraded": was_degraded})
         self.drift.update(self.service.store, results)
         for node, r in results.items():
             self._results.setdefault(node, []).append(r)
@@ -493,14 +576,12 @@ class IngestionDaemon:
     def latency_quantiles(self, qs: Sequence[float] = (0.5, 0.99)
                           ) -> Dict[str, float]:
         """Queue-latency quantiles (seconds between event arrival and
-        the flush that scored it) over the retained latency window."""
-        if not self._latencies:
-            return {f"p{int(q * 100)}": float("nan") for q in qs}
-        lat = np.asarray(self._latencies)
-        return {f"p{int(q * 100)}": float(np.quantile(lat, q))
-                for q in qs}
+        the flush that scored it), read from the shared streaming
+        histogram: exact ``np.quantile`` over the samples while under
+        ``max_latencies`` observations, log-bucket estimates beyond."""
+        return self._latency.quantiles(qs)
 
-    def stats(self) -> Dict[str, object]:
+    def stats(self) -> obs_metrics.StatsDict:
         out = {
             "events_seen": self._events_seen,
             "events_accepted": self._events_accepted,

@@ -52,6 +52,8 @@ from repro.core.preprocess import Preprocessor
 from repro.fingerprint.frame import FrameOrRecords, as_frame, concat_frames
 from repro.fleet.shard import ShardedScorer
 from repro.fleet.store import FEATURE_KEYS, FingerprintStore
+from repro.obs import metrics as obs_metrics
+from repro.obs import trace as obs_trace
 from repro.serving.engine import (MIN_BUCKET, assemble_inputs,
                                   prepare_features)
 
@@ -113,6 +115,18 @@ class FleetScoringService:
         self._quarantined_nonfinite = 0
         self._quarantined_unknown_type = 0
         self._wall_s = 0.0
+        # registry mirrors (program logic keeps the plain ints above —
+        # they must stay correct under obs.disable())
+        reg = obs_metrics.registry()
+        site = self.scorer.jit.site
+        self._m_quarantined = {
+            "nonfinite": reg.counter("fleet.quarantined",
+                                     kind="nonfinite", site=site),
+            "unknown_type": reg.counter("fleet.quarantined",
+                                        kind="unknown_type", site=site),
+        }
+        self._m_flushes = reg.counter("fleet.flushes", site=site)
+        self._m_rows = reg.counter("fleet.rows_scored", site=site)
 
     # --------------------------------------------------------- validation
     def validate_frame(self, frame) -> Dict[str, np.ndarray]:
@@ -153,6 +167,8 @@ class FleetScoringService:
                 "types the preprocessor was not fitted on")
         self._quarantined_nonfinite += n_nf
         self._quarantined_unknown_type += n_ut
+        self._m_quarantined["nonfinite"].inc(n_nf)
+        self._m_quarantined["unknown_type"].inc(n_ut)
         self._quarantine.append(frame.select(np.nonzero(bad)[0]))
         return frame.select(np.nonzero(~bad)[0])
 
@@ -196,6 +212,14 @@ class FleetScoringService:
         if not self._pending:
             return {}
         t0 = time.perf_counter()
+        span_args: Dict[str, object] = {}
+        with obs_trace.span("fleet.flush", args=span_args):
+            results = self._flush_locked(t0, span_args)
+        return results
+
+    def _flush_locked(self, t0: float,
+                      span_args: Dict[str, object]
+                      ) -> Dict[str, FleetResult]:
         pending, self._pending = self._pending, []
 
         # one vectorized preprocessing pass over all new rows, appended
@@ -235,8 +259,12 @@ class FleetScoringService:
         for req in requests:
             buckets.setdefault(req["bucket"], []).append(req)
         for bucket, group in buckets.items():
-            stack = stack_padded([req["inputs"] for req in group],
-                                 self.scorer.pad_requests(len(group)))
+            with obs_trace.span("fleet.stack",
+                                args={"bucket": bucket,
+                                      "requests": len(group)}):
+                stack = stack_padded(
+                    [req["inputs"] for req in group],
+                    self.scorer.pad_requests(len(group)))
             out = self.scorer.score_stack(self.params, stack)
             self._dispatches += 1
             for r, req in enumerate(group):
@@ -259,6 +287,10 @@ class FleetScoringService:
         self._requests_served += len(requests)
         self._flushes += 1
         self._wall_s += time.perf_counter() - t0
+        self._m_flushes.inc()
+        self._m_rows.inc(sum(len(r.row_ids) for r in results.values()))
+        span_args.update(requests=len(requests), buckets=len(buckets),
+                         rows=int(len(new_all)))
         return results
 
     # -------------------------------------------------------------- stats
@@ -267,7 +299,7 @@ class FleetScoringService:
         return self.scorer.trace_count
 
     @property
-    def stats(self) -> Dict[str, float]:
+    def stats(self) -> obs_metrics.StatsDict:
         return {
             "requests_served": self._requests_served,
             "rows_scored": self._rows_scored,

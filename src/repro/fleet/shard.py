@@ -28,6 +28,7 @@ from repro.common.mesh import (axis_specs, build_mesh, shard_map_1d,
                                shard_size)
 from repro.core.model import PeronaModel
 from repro.core.preprocess import Preprocessor
+from repro.obs.jaxstat import JitSite, instance_site
 from repro.serving.engine import ARG_NAMES, make_score_fn
 
 
@@ -41,12 +42,10 @@ class ShardedScorer:
 
         self.mesh = build_mesh("fleet", devices)
         self.n_devices = self.mesh.devices.size
-        self._trace_count = 0
+        # per-instance jit accounting on the obs registry
+        self.jit = JitSite(instance_site("fleet.scorer"))
 
-        def on_trace():
-            self._trace_count += 1
-
-        fn = make_score_fn(model, preproc, on_trace=on_trace)
+        fn = make_score_fn(model, preproc, on_trace=self.jit.tick)
         vmapped = jax.vmap(fn, in_axes=(None,) + (0,) * len(ARG_NAMES))
         sharded = shard_map_1d(
             vmapped, self.mesh,
@@ -60,7 +59,7 @@ class ShardedScorer:
     @property
     def trace_count(self) -> int:
         """jit tracings so far (1 per distinct (R, bucket) shape)."""
-        return self._trace_count
+        return self.jit.count
 
     def pad_requests(self, n_requests: int) -> int:
         """Power-of-two request-axis size, divisible by the mesh."""
@@ -82,7 +81,11 @@ class ShardedScorer:
                 f"request axis {r} not divisible by the "
                 f"{self.n_devices}-device fleet mesh; pad with "
                 "pad_requests() first")
-        with silence_unusable_donation():
+        with silence_unusable_donation(), \
+                self.jit.dispatch(
+                    "fleet.score_stack",
+                    args={"requests": r,
+                          "bucket": stack[ARG_NAMES[0]].shape[1]}):
             out = self._call(params,
                              *(jnp.asarray(stack[k])
                                for k in ARG_NAMES))

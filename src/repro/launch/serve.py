@@ -42,12 +42,20 @@ backpressure/quarantine counters and the degradation flag:
 
     PYTHONPATH=src python -m repro.launch.serve --daemon --faults \
         --nodes 6 --rounds 12
+
+Every mode accepts ``--timeline PATH`` (export the run's span
+recording as Chrome trace-event JSON — open it in
+https://ui.perfetto.dev) and ``--metrics`` (periodic + final text
+dump of the process metrics registry; ``--metrics-interval`` seconds
+between dumps). ``--daemon`` exports the daemon's own virtual-clock
+tracer; the other modes export the process-wide wall-clock tracer.
 """
 
 from __future__ import annotations
 
 import argparse
 import dataclasses
+import threading
 import time
 from typing import List, Optional
 
@@ -55,6 +63,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import obs
 from repro.configs import get_config
 from repro.models.model_zoo import build_model
 
@@ -278,7 +287,38 @@ def serve_daemon(nodes: int = 6, rounds: int = 12,
     return {"rounds": rounds, "stats": st,
             "faults": fault_counts,
             "degraded_node": degraded_node if faults else None,
-            "flagged": daemon.flagged_nodes()}
+            "flagged": daemon.flagged_nodes(),
+            # the daemon's private virtual-clock tracer: --timeline
+            # exports THIS recording in daemon mode, so flush spans
+            # and ladder instants sit on the same clock as the
+            # reported queue latencies
+            "tracer": daemon.tracer}
+
+
+def _start_metrics_dumper(interval: float) -> threading.Event:
+    """Background thread printing the metrics registry every
+    ``interval`` seconds until the returned event is set."""
+    stop = threading.Event()
+
+    def loop():
+        while not stop.wait(interval):
+            text = obs.registry().render()
+            if text:
+                print(f"[metrics @ {time.strftime('%H:%M:%S')}]\n"
+                      f"{text}", flush=True)
+
+    threading.Thread(target=loop, name="perona-metrics",
+                     daemon=True).start()
+    return stop
+
+
+def _export_timeline(path: str,
+                     tracer: Optional[obs.Tracer] = None) -> None:
+    obs.write_chrome_trace(path, tracer=tracer)
+    summary = obs.validate_chrome_trace_file(path)
+    print(f"[timeline] wrote {path}: {summary['events']} events, "
+          f"{summary['spans']} spans on {summary['threads']} "
+          "thread track(s) — load in https://ui.perfetto.dev")
 
 
 def main() -> None:
@@ -305,15 +345,41 @@ def main() -> None:
     ap.add_argument("--nodes", type=int, default=16,
                     help="fleet size for --fleet")
     ap.add_argument("--rounds", type=int, default=10)
+    ap.add_argument("--timeline", metavar="PATH", default=None,
+                    help="export the run's span recording as Chrome "
+                         "trace-event JSON (perfetto-loadable)")
+    ap.add_argument("--metrics", action="store_true",
+                    help="dump the metrics registry periodically and "
+                         "at exit")
+    ap.add_argument("--metrics-interval", type=float, default=10.0,
+                    help="seconds between --metrics dumps")
     args = ap.parse_args()
 
+    dumper = (_start_metrics_dumper(args.metrics_interval)
+              if args.metrics else None)
+    try:
+        tracer = _run(args)
+    finally:
+        if dumper is not None:
+            dumper.set()
+        if args.metrics:
+            text = obs.registry().render()
+            if text:
+                print(f"[metrics final]\n{text}", flush=True)
+    if args.timeline:
+        _export_timeline(args.timeline, tracer=tracer)
+
+
+def _run(args) -> Optional[obs.Tracer]:
+    """Dispatch one serving mode; returns the tracer whose recording
+    ``--timeline`` should export (None -> the process-wide tracer)."""
     if args.fingerprint:
         out = serve_fingerprints(args.rounds, seed=args.seed)
         print(f"[serve-fp] {out['rounds']} rounds, {out['scored']} "
               f"executions, {out['seconds']:.2f}s "
               f"({out['scored'] / max(out['seconds'], 1e-9):.0f} exec/s), "
               f"{out['traces']} compiles, excluded={out['excluded']}")
-        return
+        return None
 
     if args.daemon:
         out = serve_daemon(args.nodes, args.rounds, seed=args.seed,
@@ -340,7 +406,7 @@ def main() -> None:
             print(f"[serve-daemon] injected faults: {out['faults']}; "
                   f"degraded node {out['degraded_node']} -> "
                   f"flagged={out['flagged']}")
-        return
+        return out["tracer"]
 
     if args.fleet:
         out = serve_fleet(args.nodes, args.rounds, seed=args.seed)
@@ -352,7 +418,7 @@ def main() -> None:
               f"{s['requests_per_s']:.0f} req/s; "
               f"drift tracked for {out['drift_nodes']} nodes, "
               f"worst={out['worst_node']}")
-        return
+        return None
 
     cfg = get_config(args.arch)
     if args.scale == "small":
@@ -371,12 +437,15 @@ def main() -> None:
     server = SlotServer(model, params, n_slots=args.slots,
                         max_len=args.max_len)
     t0 = time.time()
-    out = server.serve(requests)
+    with obs.span("slots.serve", args={"requests": len(requests),
+                                       "slots": args.slots}):
+        out = server.serve(requests)
     dt = time.time() - t0
     n_tokens = sum(len(r.tokens) for r in out["completed"])
     print(f"[serve] {len(out['completed'])} requests, {n_tokens} tokens, "
           f"{out['decode_steps']} decode steps, {dt:.1f}s "
           f"({n_tokens/max(dt,1e-9):.1f} tok/s)")
+    return None
 
 
 if __name__ == "__main__":

@@ -46,10 +46,13 @@ import numpy as np
 
 from repro.common.mesh import (axis_specs, build_mesh, pad_lanes,
                                pow2_devices, shard_map_1d, shard_size)
-from repro.core.trainer import TraceCount
+from repro.obs.jaxstat import JitSite
 
-#: Ticked once per tracing of the scanned replay program.
-REPLAY_TRACES = TraceCount()
+#: Ticked once per tracing of the scanned replay program — a
+#: registry-backed :class:`repro.obs.jaxstat.JitSite` whose
+#: ``dispatch()`` wrapper additionally books per-dispatch wall time
+#: into compile-vs-run registry counters and records a device span.
+REPLAY_TRACES = JitSite("optimizer.replay")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -418,12 +421,16 @@ def replay_async(tables: LaneTables,
         # keyed on placement too: each device's first call compiles
         # its own executable and must take the serialized branch
         sig = (cfg, lanes, slots, n_cand, dim, rounds, devs, device)
-        if sig in _COMPILED_SIGNATURES:
-            sel, count = fn(carry0, jnp_tables)
-        else:
-            with _COMPILE_LOCK:
+        with REPLAY_TRACES.dispatch(
+                "replay.dispatch",
+                args={"lanes": n_lanes, "padded": lanes,
+                      "rounds": rounds}):
+            if sig in _COMPILED_SIGNATURES:
                 sel, count = fn(carry0, jnp_tables)
-                _COMPILED_SIGNATURES.add(sig)
+            else:
+                with _COMPILE_LOCK:
+                    sel, count = fn(carry0, jnp_tables)
+                    _COMPILED_SIGNATURES.add(sig)
     return PendingReplay(n_lanes=n_lanes, dispatches=1,
                          _sel=sel, _count=count)
 
@@ -522,12 +529,16 @@ def replay_seeded_async(spec: SeededLaneSpec,
         carry0 = (to_dev(sel0), to_dev(count0), to_dev(active0))
         sig = ("seeded", cfg, lanes, slots, n_cand, base_dim, rounds,
                n_workloads, n_conds, devs, device)
-        if sig in _COMPILED_SIGNATURES:
-            sel, count = fn(carry0, lane_args, grid_args)
-        else:
-            with _COMPILE_LOCK:
+        with REPLAY_TRACES.dispatch(
+                "replay.dispatch_seeded",
+                args={"lanes": n_lanes, "padded": lanes,
+                      "rounds": rounds}):
+            if sig in _COMPILED_SIGNATURES:
                 sel, count = fn(carry0, lane_args, grid_args)
-                _COMPILED_SIGNATURES.add(sig)
+            else:
+                with _COMPILE_LOCK:
+                    sel, count = fn(carry0, lane_args, grid_args)
+                    _COMPILED_SIGNATURES.add(sig)
     return PendingReplay(n_lanes=n_lanes, dispatches=1,
                          _sel=sel, _count=count)
 

@@ -30,6 +30,7 @@ import numpy as np
 from repro.common.bucketing import next_pow2
 from repro.core.ranking import machine_score_matrix, \
     machine_score_vector
+from repro.obs import trace as obs_trace
 from repro.optimizer.replay import (LaneTables, ReplayConfig,
                                     SeededLaneSpec, replay,
                                     replay_async, replay_seeded_async,
@@ -531,22 +532,33 @@ def replay_pipelined(ds: ScoutDataset, scenarios: Sequence[Scenario],
 
     dispatch = replay_seeded_async if seeded else replay_async
 
-    def run_block(tab, dev):
+    def run_block(tab, dev, block_idx):
         # worker thread: dispatch + device wait (GIL released inside
-        # XLA); per-device workers keep each device's blocks in order
-        if shard_blocks:
-            return dispatch(tab, cfg, devices=devices,
+        # XLA); per-device workers keep each device's blocks in order.
+        # The span lands on the worker's own timeline track — its
+        # overlap with the main thread's replay.build_tables spans IS
+        # the pipelining (asserted in tests/test_obs.py).
+        with obs_trace.span("replay.block_scan",
+                            cat=obs_trace.CAT_DEVICE,
+                            args={"block": block_idx,
+                                  "lanes": len(tab)}):
+            if shard_blocks:
+                return dispatch(tab, cfg, devices=devices,
+                                lanes_floor=block).result()
+            return dispatch(tab, cfg, device=dev,
                             lanes_floor=block).result()
-        return dispatch(tab, cfg, device=dev,
-                        lanes_floor=block).result()
 
     def collect(tab, future):
         result = future.result()
         stats["dispatches"] += result.dispatches
-        if seeded:
-            traces.extend(traces_from_spec(tab, result, ds.configs))
-        else:
-            traces.extend(traces_from_result(tab, result, ds.configs))
+        with obs_trace.span("replay.materialize_traces",
+                            args={"lanes": len(tab)}):
+            if seeded:
+                traces.extend(
+                    traces_from_spec(tab, result, ds.configs))
+            else:
+                traces.extend(
+                    traces_from_result(tab, result, ds.configs))
 
     in_flight: List = []  # (tables, future), submission order
     # one single-worker pool per device: a device's blocks dispatch in
@@ -557,14 +569,17 @@ def replay_pipelined(ds: ScoutDataset, scenarios: Sequence[Scenario],
         for i, start in enumerate(range(0, len(scenarios), block)):
             chunk = scenarios[start:start + block]
             t0 = time.perf_counter()  # host work, overlapped with the
-            if seeded:
-                tab = lane_spec(ds, chunk, machine_scores, cfg)
-            else:
-                tab = lane_tables(ds, chunk, machine_scores, cfg)
+            with obs_trace.span("replay.build_tables",
+                                args={"block": i,
+                                      "lanes": len(chunk)}):
+                if seeded:
+                    tab = lane_spec(ds, chunk, machine_scores, cfg)
+                else:
+                    tab = lane_tables(ds, chunk, machine_scores, cfg)
             stats["table_s"] += time.perf_counter() - t0
             d = i % len(devs)
             in_flight.append(
-                (tab, pools[d].submit(run_block, tab, devs[d])))
+                (tab, pools[d].submit(run_block, tab, devs[d], i)))
             stats["blocks"] += 1
             # drain finished blocks (in order) without blocking, and
             # cap the queue at one block per device

@@ -51,6 +51,7 @@ from repro.core.graph_data import graph_structure
 from repro.core.model import PeronaModel
 from repro.core.preprocess import Preprocessor
 from repro.fingerprint.frame import BenchmarkFrame, FrameOrRecords, as_frame
+from repro.obs.jaxstat import JitSite, instance_site
 
 MIN_BUCKET = 64
 
@@ -193,22 +194,22 @@ class FingerprintEngine:
         self.params = params
         self.preproc = preproc
         self.min_bucket = min_bucket
-        self._trace_count = 0
-
-        def on_trace():
-            self._trace_count += 1
+        # per-instance jit accounting on the obs registry (tracings,
+        # dispatches, compile/run wall split); trace_count stays a
+        # thin read of the same counter
+        self.jit = JitSite(instance_site("serving.engine"))
 
         # donate the padded input buffers (everything but params): they
         # are rebuilt from numpy on every call and never reused
         self.donate_argnums = tuple(range(1, 1 + len(ARG_NAMES)))
         self._score = jax.jit(
-            make_score_fn(model, preproc, on_trace=on_trace),
+            make_score_fn(model, preproc, on_trace=self.jit.tick),
             donate_argnums=self.donate_argnums)
 
     @property
     def trace_count(self) -> int:
         """Number of jit tracings so far (1 per distinct bucket)."""
-        return self._trace_count
+        return self.jit.count
 
     def prepare(self, frame: BenchmarkFrame):
         """Device-ready (donatable) jnp inputs in ARG_NAMES order."""
@@ -223,7 +224,9 @@ class FingerprintEngine:
         frame = as_frame(data)
         n = len(frame)
         args, b = self.prepare(frame)
-        with silence_unusable_donation():
+        with silence_unusable_donation(), \
+                self.jit.dispatch("engine.score",
+                                  args={"rows": n, "bucket": b}):
             out = self._score(self.params, *args)
         return ScoreResult(
             anomaly_prob=np.asarray(out["anomaly_prob"])[:n],

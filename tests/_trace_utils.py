@@ -5,9 +5,10 @@ counter that increments at trace time only) for reuse: wrap the code
 under test in :func:`expect_traces` and the helper asserts exactly how
 many jit tracings happened inside the block.
 
-Works with any counter object exposing either ``count``
-(``repro.core.trainer.TraceCount``) or ``trace_count``
-(``serving.FingerprintEngine``).
+Works with any counter object exposing ``trace_count``
+(``serving.FingerprintEngine``, ``repro.obs.jaxstat.JitSite``),
+``count`` (legacy trace counters, ``JitSite`` again) or ``value``
+(a raw ``repro.obs.metrics.Counter`` pulled off the registry).
 """
 
 import contextlib
@@ -16,7 +17,9 @@ import contextlib
 def _read(counter) -> int:
     if hasattr(counter, "trace_count"):
         return counter.trace_count
-    return counter.count
+    if hasattr(counter, "count"):
+        return counter.count
+    return int(counter.value)
 
 
 @contextlib.contextmanager
