@@ -53,6 +53,36 @@ import time
 
 import numpy as np
 
+#: Regression-gate policy for this module's tracked rows (see
+#: ``benchmarks.gate`` / bench_fleet.POLICIES for the rationale).
+#: Trace-parity rows gate at threshold 0: ANY drop below the all-lanes
+#: ratio of 1.0 is a correctness regression, not noise. Compile-time
+#: rows gate loosely (compiles are one-off and XLA-version dependent);
+#: the pipelined-speedup ratio is informational because it is
+#: hardware-ceiling-bound on small CI runners (see README
+#: "Multi-device replay").
+POLICIES = {
+    "optimizer.sequential.searches_per_s": ("higher", 10.0),
+    "optimizer.batched.searches_per_s": ("higher", 10.0),
+    "optimizer.sharded.searches_per_s": ("higher", 10.0),
+    "optimizer.seeded.searches_per_s": ("higher", 10.0),
+    "optimizer.large.pipelined.searches_per_s": ("higher", 10.0),
+    "optimizer.speedup": ("higher", 15.0),
+    "optimizer.trace_parity": ("higher", 0.0),
+    "optimizer.seeded.trace_parity": ("higher", 0.0),
+    "optimizer.batched.compile_s": ("lower", 25.0),
+    "optimizer.seeded.compile_s": ("lower", 25.0),
+    "optimizer.seeded.spec_s": ("lower", 50.0),
+    "optimizer.lane_tables_s": "info",  # ~0 on quick matrices
+    "optimizer.large.unpipelined.wall_s": ("lower", 15.0),
+    "optimizer.large.pipelined.wall_s": ("lower", 15.0),
+    "optimizer.large.pipelined.speedup": "info",
+    "optimizer.large.pipelined.seeded.wall_s": ("lower", 15.0),
+    "optimizer.large.pipelined.seeded.speedup": "info",
+    "optimizer.mean_runs_per_search": "info",
+    "optimizer.wall_s": "info",
+}
+
 
 def _profile_scores(vm_types):
     """Deterministic fingerprint-score stand-in: per-aspect capability

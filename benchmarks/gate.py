@@ -1,0 +1,193 @@
+"""Noise-aware perf-regression gate over the benchmark history.
+
+The *enforce* stage of the record->detect->enforce loop: load the
+:class:`benchmarks.history.BenchHistory`, judge the newest run of each
+module against EWMA baselines over its prior (non-smoke,
+hardware-matched) runs via ``repro.obs.regress``, attribute confirmed
+regressions by diffing the companion telemetry snapshots, write the
+markdown trend report, and exit nonzero when a regression (or a
+bench-module ERROR row) is confirmed.
+
+    PYTHONPATH=src python -m benchmarks.gate [--history BENCH_history.npz]
+        [--module fleet] [--report TREND_REPORT.md] [--alpha 0.3]
+        [--include-smoke] [--any-hardware] [--check-schema]
+
+``--check-schema`` is the CI fast-lane mode: assert the history loads,
+its schema version is readable, every run's snapshot/params JSON
+parses, and the trend report renders — no perf verdicts, exit 0 unless
+the artifact itself is broken. The full gate (no ``--check-schema``)
+is the release-lane job: it enforces the verdicts.
+"""
+
+from __future__ import annotations
+
+import argparse
+import importlib
+import sys
+from typing import Dict, List, Optional
+
+from benchmarks.history import BenchHistory
+
+#: the A/A null row bench_fleet ships: two identical disabled-plane
+#: daemon runs measured against each other — the same-code noise of
+#: the very machine the run executed on (percent)
+AA_NOISE_METRIC = "fleet.daemon.obs.noise_pct"
+
+
+def module_policies(module: str):
+    """The bench module's explicit ``POLICIES`` table (normalized), or
+    None when the module doesn't declare one."""
+    from repro.obs import regress
+    try:
+        mod = importlib.import_module(f"benchmarks.bench_{module}")
+    except ImportError:
+        return None
+    raw = getattr(mod, "POLICIES", None)
+    return None if raw is None else regress.policy_table(raw)
+
+
+def evaluate_module(history: BenchHistory, module: str, *,
+                    run: Optional[int] = None, alpha: float = 0.3,
+                    include_smoke: bool = False,
+                    match_hardware: bool = True) -> List:
+    """Findings for one module's candidate run (newest by default):
+    one per metric the run carries, judged against the EWMA fold of
+    the prior runs; regressions carry snapshot-diff attribution."""
+    import dataclasses
+
+    from repro.obs import metrics, regress
+
+    if run is None:
+        run = history.latest_run(module)
+    if run is None:
+        return []
+    overrides = module_policies(module)
+    aa_noise = history.value(run, AA_NOISE_METRIC) or 0.0
+    findings = []
+    baseline_runs = history.run_indices(
+        module, include_smoke=include_smoke,
+        hardware=(history.hardware_key(run) if match_hardware
+                  else None),
+        before_run=run)
+    attribution = ()
+    if len(baseline_runs):
+        # attribute against the newest baseline run's snapshot: both
+        # runs executed the same workload, so counter families that
+        # moved name the regression class
+        delta = metrics.registry().snapshot_delta(
+            history.snapshot(int(baseline_runs[-1])),
+            history.snapshot(run))
+        attribution = regress.attribute_delta(delta)
+    for metric in history.metrics_for(module, run):
+        value = history.value(run, metric)
+        base = history.baseline_series(
+            module, metric, before_run=run,
+            include_smoke=include_smoke,
+            match_hardware=match_hardware)
+        f = regress.evaluate_series(module, metric, base, value,
+                                    overrides=overrides, alpha=alpha,
+                                    aa_noise_pct=aa_noise)
+        if f.regressed and attribution:
+            f = dataclasses.replace(f, attribution=attribution)
+        findings.append(f)
+    return findings
+
+
+def evaluate_history(history: BenchHistory, *,
+                     module: Optional[str] = None, alpha: float = 0.3,
+                     include_smoke: bool = False,
+                     match_hardware: bool = True) -> Dict[str, List]:
+    """Findings for the newest run of every module (or one module)."""
+    modules = [module] if module else history.modules()
+    return {m: evaluate_module(history, m, alpha=alpha,
+                               include_smoke=include_smoke,
+                               match_hardware=match_hardware)
+            for m in modules}
+
+
+def gate_verdict(history: BenchHistory,
+                 findings_by_module: Dict[str, List]) -> List[str]:
+    """The failures that make the gate exit nonzero: confirmed
+    regressions plus bench-module ERROR rows on each module's newest
+    run."""
+    failures = []
+    for module, findings in findings_by_module.items():
+        run = history.latest_run(module)
+        if run is not None and history.run_info(run)["error"]:
+            failures.append(f"{module}: bench module recorded an "
+                            "ERROR row on the gated run")
+        failures.extend(f.describe() for f in findings if f.regressed)
+    return failures
+
+
+def check_schema(history_path: str) -> BenchHistory:
+    """CI fast-lane mode: the history artifact must load and every
+    run's JSON columns must parse. Raises on any violation."""
+    history = BenchHistory.load(history_path)
+    for run in range(len(history)):
+        info = history.run_info(run)
+        assert info["module"], f"run {run}: empty module name"
+        history.params(run)
+        snap = history.snapshot(run)
+        assert isinstance(snap, dict), f"run {run}: bad snapshot"
+    return history
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.split("\n")[0])
+    ap.add_argument("--history", default="BENCH_history.npz")
+    ap.add_argument("--module", default=None,
+                    help="gate one module only (default: all)")
+    ap.add_argument("--report", default="TREND_REPORT.md",
+                    help="markdown trend report path ('' to skip)")
+    ap.add_argument("--alpha", type=float, default=0.3,
+                    help="EWMA baseline fold factor")
+    ap.add_argument("--include-smoke", action="store_true",
+                    help="let smoke runs into the baselines (and the "
+                         "report trajectory)")
+    ap.add_argument("--any-hardware", action="store_true",
+                    help="compare across hardware descriptors")
+    ap.add_argument("--check-schema", action="store_true",
+                    help="only assert history loadability + report "
+                         "generation (the CI fast-lane smoke)")
+    args = ap.parse_args(argv)
+
+    try:
+        history = check_schema(args.history)
+    except (OSError, ValueError, KeyError, AssertionError) as e:
+        print(f"gate: history artifact {args.history} is broken: {e}",
+              file=sys.stderr)
+        return 2
+    findings = evaluate_history(history, module=args.module,
+                                alpha=args.alpha,
+                                include_smoke=args.include_smoke,
+                                match_hardware=not args.any_hardware)
+    if args.report:
+        from benchmarks import report
+        report.write_trend_report(args.report, history, findings,
+                                  include_smoke=args.include_smoke)
+        print(f"gate: trend report -> {args.report}")
+    if args.check_schema:
+        print(f"gate: schema ok — {len(history)} runs, "
+              f"{history.n_samples} samples, "
+              f"modules {history.modules()}")
+        return 0
+    for module, fs in sorted(findings.items()):
+        for f in fs:
+            print(f"  {f.describe()}")
+    failures = gate_verdict(history, findings)
+    if failures:
+        print(f"gate: FAIL — {len(failures)} confirmed "
+              "regression(s):", file=sys.stderr)
+        for line in failures:
+            print(f"  {line}", file=sys.stderr)
+        return 1
+    print("gate: PASS — no confirmed regressions")
+    return 0
+
+
+if __name__ == "__main__":
+    import os
+    sys.path.insert(0, os.path.dirname(os.path.dirname(
+        os.path.abspath(__file__))))
+    sys.exit(main())

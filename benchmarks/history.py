@@ -1,0 +1,366 @@
+"""Append-only columnar benchmark-history store (ALOJA-style).
+
+ALOJA built its value on a persistent repository of benchmark
+executions with predictive analytics on top; this is that repository
+for the repo's *own* perf trajectory. Every ``BENCH_*.json`` payload
+``benchmarks/run.py`` writes — headline rows, workload params, the
+attached ``obs`` registry snapshot, and the provenance stamp (git SHA,
+dirty flag, device/core counts, backend) — ingests into one
+:class:`BenchHistory`, keyed by (module, metric, run).
+
+Same struct-of-arrays idiom as ``fleet.store.FingerprintStore``:
+interned vocabularies (modules, metric names), a capacity-doubling
+sample buffer for the (run, metric, value) triples — the axis that
+grows by hundreds of rows per ingested run — and plain per-run lists
+for the low-cardinality provenance/JSON columns. Series reads are pure
+gathers; persistence is one compressed ``.npz`` via the store's
+``atomic_savez`` (a crash mid-save never corrupts the previous
+history).
+
+Smoke runs (``run.py --smoke``) ingest *tagged* and are excluded from
+gate baselines by default — CI's minimal-workload numbers must never
+anchor the trajectory a full run is judged against. Baselines also
+filter to the candidate's hardware descriptor (device_count,
+cpu_cores, backend) so a laptop run is never judged against the CI
+fleet's numbers.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.fleet.store import atomic_savez
+
+_MIN_CAP = 256
+
+#: schema version stamped into every saved history
+SCHEMA_VERSION = 1
+
+#: per-run scalar columns, in save order: (payload key, dtype, default)
+_RUN_FIELDS: Tuple[Tuple[str, type, object], ...] = (
+    ("unix_time", float, 0.0),
+    ("git_sha", str, "unknown"),
+    ("dirty", bool, False),
+    ("smoke", bool, False),
+    ("quick", bool, False),
+    ("device_count", int, 0),
+    ("cpu_cores", int, 0),
+    ("backend", str, "unknown"),
+)
+
+
+def parse_value(raw) -> Optional[float]:
+    """Best-effort numeric parse of a bench row value: plain numbers
+    pass through, ``"14.3x"`` speedups drop the suffix, ``"432/432"``
+    parity / occupancy fractions become their ratio, anything
+    non-numeric (an ERROR repr, an empty cell) is None."""
+    if isinstance(raw, bool):
+        return float(raw)
+    if isinstance(raw, (int, float)):
+        v = float(raw)
+        return v if np.isfinite(v) else None
+    if not isinstance(raw, str):
+        return None
+    s = raw.strip()
+    if not s:
+        return None
+    if s.endswith(("x", "×")):
+        s = s[:-1]
+    if "/" in s:
+        num, _, den = s.partition("/")
+        try:
+            d = float(den)
+            return float(num) / d if d else None
+        except ValueError:
+            return None
+    try:
+        v = float(s)
+    except ValueError:
+        return None
+    return v if np.isfinite(v) else None
+
+
+class _F64Vec:
+    """Growable float64 column (amortized O(1) extend) — the same
+    capacity-doubling idiom as the fingerprint store's buffers."""
+
+    __slots__ = ("a", "n")
+
+    def __init__(self, dtype=np.float64):
+        self.a = np.empty(_MIN_CAP, dtype)
+        self.n = 0
+
+    def view(self) -> np.ndarray:
+        return self.a[: self.n]
+
+    def extend(self, vals) -> None:
+        vals = np.asarray(vals, self.a.dtype)
+        need = self.n + len(vals)
+        if need > len(self.a):
+            grown = np.empty(max(2 * len(self.a), need), self.a.dtype)
+            grown[: self.n] = self.a[: self.n]
+            self.a = grown
+        self.a[self.n: need] = vals
+        self.n = need
+
+
+class BenchHistory:
+    """Append-only history of benchmark runs, columnar over samples."""
+
+    def __init__(self):
+        # vocabularies (grow in place; code -> name)
+        self._modules: List[str] = []
+        self._mod_idx: Dict[str, int] = {}
+        self._metrics: List[str] = []
+        self._met_idx: Dict[str, int] = {}
+        # per-run columns (low cardinality: plain lists)
+        self._run_module = _F64Vec(np.int32)
+        self._run_fields: Dict[str, list] = {k: []
+                                             for k, _, _ in _RUN_FIELDS}
+        self._run_error: List[bool] = []
+        self._params_json: List[str] = []
+        self._snapshot_json: List[str] = []
+        # sample columns (the growing axis: SoA buffers)
+        self._s_run = _F64Vec(np.int32)
+        self._s_metric = _F64Vec(np.int32)
+        self._s_value = _F64Vec(np.float64)
+
+    # ------------------------------------------------------------ basics
+    def __len__(self) -> int:
+        return len(self._params_json)
+
+    @property
+    def n_samples(self) -> int:
+        return self._s_value.n
+
+    def modules(self) -> List[str]:
+        return sorted(self._modules)
+
+    @staticmethod
+    def _intern(name: str, vocab: List[str], idx: Dict[str, int]) -> int:
+        code = idx.get(name)
+        if code is None:
+            code = len(vocab)
+            vocab.append(name)
+            idx[name] = code
+        return code
+
+    # ------------------------------------------------------------ append
+    def append(self, payload: Dict[str, object], *,
+               smoke: Optional[bool] = None) -> int:
+        """Ingest one ``BENCH_*.json`` payload; returns the run index.
+        Provenance fields come from the payload top level (stamped by
+        ``run.py``); ``smoke`` overrides the payload's own tag (tests
+        and backfills of pre-provenance artifacts)."""
+        run = len(self)
+        module = str(payload.get("module", "unknown"))
+        self._run_module.extend([self._intern(module, self._modules,
+                                              self._mod_idx)])
+        for key, typ, default in _RUN_FIELDS:
+            val = payload.get(key, default)
+            if key == "smoke" and smoke is not None:
+                val = smoke
+            self._run_fields[key].append(typ(val))
+        rows = payload.get("rows") or []
+        error = False
+        codes, values = [], []
+        for row in rows:
+            name = str(row.get("name", ""))
+            if name.endswith(".ERROR"):
+                error = True
+                continue
+            v = parse_value(row.get("derived"))
+            if v is None:
+                v = parse_value(row.get("us_per_call"))
+            if v is None:
+                continue
+            codes.append(self._intern(name, self._metrics,
+                                      self._met_idx))
+            values.append(v)
+        self._run_error.append(error)
+        self._params_json.append(json.dumps(payload.get("params"),
+                                            sort_keys=True))
+        self._snapshot_json.append(json.dumps(payload.get("metrics")
+                                              or {}, sort_keys=True))
+        self._s_run.extend(np.full(len(codes), run, np.int32))
+        self._s_metric.extend(codes)
+        self._s_value.extend(values)
+        return run
+
+    # -------------------------------------------------------------- reads
+    def run_info(self, run: int) -> Dict[str, object]:
+        """Provenance + tags of one run."""
+        info: Dict[str, object] = {
+            "module": self._modules[int(self._run_module.view()[run])],
+            "error": self._run_error[run],
+        }
+        for key, _, _ in _RUN_FIELDS:
+            info[key] = self._run_fields[key][run]
+        return info
+
+    def params(self, run: int) -> object:
+        return json.loads(self._params_json[run])
+
+    def snapshot(self, run: int) -> Dict[str, object]:
+        """The obs registry snapshot attached to the run's payload
+        (the attribution pass diffs these)."""
+        return json.loads(self._snapshot_json[run])
+
+    def hardware_key(self, run: int) -> Tuple[int, int, str]:
+        """Hostname-free hardware descriptor runs are compared
+        within."""
+        return (self._run_fields["device_count"][run],
+                self._run_fields["cpu_cores"][run],
+                self._run_fields["backend"][run])
+
+    def run_indices(self, module: Optional[str] = None, *,
+                    include_smoke: bool = True,
+                    hardware: Optional[Tuple[int, int, str]] = None,
+                    before_run: Optional[int] = None) -> np.ndarray:
+        """Run indices, chronological by (unix_time, run). Filters:
+        module, smoke exclusion, hardware descriptor, and append order
+        (``before_run`` — "history as of that run")."""
+        n = len(self)
+        sel = np.ones(n, bool)
+        if module is not None:
+            code = self._mod_idx.get(module)
+            if code is None:
+                return np.zeros(0, np.int64)
+            sel &= self._run_module.view() == code
+        if not include_smoke:
+            sel &= ~np.asarray(self._run_fields["smoke"], bool)
+        if hardware is not None:
+            hw = np.asarray([self.hardware_key(r) == hardware
+                             for r in range(n)], bool)
+            sel &= hw
+        runs = np.nonzero(sel)[0]
+        if before_run is not None:
+            runs = runs[runs < before_run]
+        times = np.asarray(self._run_fields["unix_time"],
+                           np.float64)[runs]
+        return runs[np.lexsort((runs, times))].astype(np.int64)
+
+    def latest_run(self, module: Optional[str] = None, *,
+                   include_smoke: bool = True) -> Optional[int]:
+        runs = self.run_indices(module, include_smoke=include_smoke)
+        return int(runs[-1]) if len(runs) else None
+
+    def metrics_for(self, module: str, run: Optional[int] = None
+                    ) -> List[str]:
+        """Metric names recorded for a module (or for one run of it),
+        in first-seen order."""
+        runs = (self.run_indices(module) if run is None
+                else np.asarray([run]))
+        mask = np.isin(self._s_run.view(), runs)
+        codes = np.unique(self._s_metric.view()[mask])
+        return [self._metrics[c] for c in sorted(codes)]
+
+    def value(self, run: int, metric: str) -> Optional[float]:
+        """One (run, metric) cell (None when the run lacks the row)."""
+        code = self._met_idx.get(metric)
+        if code is None:
+            return None
+        mask = ((self._s_run.view() == run)
+                & (self._s_metric.view() == code))
+        hits = np.nonzero(mask)[0]
+        return float(self._s_value.view()[hits[-1]]) if len(hits) \
+            else None
+
+    def series(self, module: str, metric: str, *,
+               include_smoke: bool = False,
+               hardware: Optional[Tuple[int, int, str]] = None,
+               before_run: Optional[int] = None
+               ) -> Tuple[np.ndarray, np.ndarray]:
+        """(run indices, values), chronological, of one metric's
+        trajectory — smoke runs excluded by default."""
+        runs = self.run_indices(module, include_smoke=include_smoke,
+                                hardware=hardware,
+                                before_run=before_run)
+        code = self._met_idx.get(metric)
+        if code is None or len(runs) == 0:
+            return np.zeros(0, np.int64), np.zeros(0)
+        mask = (self._s_metric.view() == code) \
+            & np.isin(self._s_run.view(), runs)
+        s_runs = self._s_run.view()[mask].astype(np.int64)
+        s_vals = self._s_value.view()[mask]
+        # order samples like `runs` (chronological), keep runs that
+        # actually carry the metric
+        pos = {int(r): i for i, r in enumerate(runs)}
+        order = np.argsort([pos[int(r)] for r in s_runs],
+                           kind="stable")
+        return s_runs[order], s_vals[order]
+
+    def baseline_series(self, module: str, metric: str, *,
+                        before_run: int,
+                        include_smoke: bool = False,
+                        match_hardware: bool = True) -> np.ndarray:
+        """The values a candidate run is judged against: every earlier
+        run of the module carrying the metric — smoke runs excluded by
+        default, filtered to the candidate's hardware descriptor
+        unless ``match_hardware=False``."""
+        hardware = (self.hardware_key(before_run) if match_hardware
+                    else None)
+        _, vals = self.series(module, metric,
+                              include_smoke=include_smoke,
+                              hardware=hardware, before_run=before_run)
+        return vals
+
+    # ---------------------------------------------------------- save/load
+    def save(self, path: str) -> None:
+        """Durable one-file snapshot (compressed .npz, atomic)."""
+        payload: Dict[str, np.ndarray] = {
+            "version": np.asarray(SCHEMA_VERSION),
+            "modules": np.asarray(self._modules, dtype=str),
+            "metric_names": np.asarray(self._metrics, dtype=str),
+            "run_module": self._run_module.view(),
+            "run_error": np.asarray(self._run_error, bool),
+            "params_json": np.asarray(self._params_json, dtype=str),
+            "snapshot_json": np.asarray(self._snapshot_json,
+                                        dtype=str),
+            "s_run": self._s_run.view(),
+            "s_metric": self._s_metric.view(),
+            "s_value": self._s_value.view(),
+        }
+        for key, typ, _ in _RUN_FIELDS:
+            dtype = {float: np.float64, bool: bool, int: np.int64,
+                     str: str}[typ]
+            payload[f"run_{key}"] = np.asarray(self._run_fields[key],
+                                               dtype=dtype)
+        atomic_savez(path, **payload)
+
+    @classmethod
+    def load(cls, path: str) -> "BenchHistory":
+        with np.load(path, allow_pickle=False) as z:
+            version = int(z["version"])
+            if version > SCHEMA_VERSION:
+                raise ValueError(
+                    f"{path}: history schema v{version} is newer than "
+                    f"this reader (v{SCHEMA_VERSION})")
+            hist = cls()
+            hist._modules = [str(x) for x in z["modules"]]
+            hist._mod_idx = {m: i for i, m
+                             in enumerate(hist._modules)}
+            hist._metrics = [str(x) for x in z["metric_names"]]
+            hist._met_idx = {m: i for i, m
+                             in enumerate(hist._metrics)}
+            hist._run_module.extend(z["run_module"])
+            hist._run_error = [bool(x) for x in z["run_error"]]
+            hist._params_json = [str(x) for x in z["params_json"]]
+            hist._snapshot_json = [str(x) for x in z["snapshot_json"]]
+            for key, typ, _ in _RUN_FIELDS:
+                hist._run_fields[key] = [typ(x)
+                                         for x in z[f"run_{key}"]]
+            hist._s_run.extend(z["s_run"])
+            hist._s_metric.extend(z["s_metric"])
+            hist._s_value.extend(z["s_value"])
+            return hist
+
+    @classmethod
+    def load_or_new(cls, path: str) -> "BenchHistory":
+        """Load when the file exists, else a fresh empty history (the
+        ``run.py --gate`` first-run path)."""
+        return cls.load(path) if os.path.exists(path) else cls()

@@ -1,6 +1,8 @@
-"""Render EXPERIMENTS.md tables from the dry-run / perf artifacts.
+"""Render EXPERIMENTS.md tables from the dry-run / perf artifacts,
+and the perf-trend report from the benchmark history store.
 
-    PYTHONPATH=src python -m benchmarks.report [--section dryrun|roofline|perf]
+    PYTHONPATH=src python -m benchmarks.report
+        [--section dryrun|roofline|perf|trend]
 """
 
 from __future__ import annotations
@@ -100,11 +102,118 @@ def perf_log() -> str:
     return "\n".join(lines)
 
 
+# ------------------------------------------------------ perf trend
+
+_SPARK_LEVELS = "▁▂▃▄▅▆▇█"
+
+
+def spark(values, width: int = 16) -> str:
+    """Unicode sparkline over the last ``width`` values (min-max
+    normalized; a flat series renders mid-level)."""
+    import math
+
+    vals = [v for v in values if v is not None
+            and math.isfinite(float(v))][-width:]
+    if not vals:
+        return ""
+    lo, hi = min(vals), max(vals)
+    if hi == lo:
+        return _SPARK_LEVELS[3] * len(vals)
+    n = len(_SPARK_LEVELS) - 1
+    return "".join(_SPARK_LEVELS[round((v - lo) / (hi - lo) * n)]
+                   for v in vals)
+
+
+def _fmt_num(v: float) -> str:
+    import math
+
+    if v is None or not math.isfinite(v):
+        return "—"
+    if v == int(v) and abs(v) < 1e6:
+        return str(int(v))
+    return f"{v:.4g}"
+
+
+def trend_report(history, findings_by_module, *,
+                 include_smoke: bool = False) -> str:
+    """The markdown trend report the gate writes: per module, a
+    provenance header for the gated run and a per-metric table —
+    history depth, EWMA baseline, newest value, delta vs threshold,
+    verdict, sparkline of the trajectory, and the attribution line for
+    confirmed regressions. Rendered entirely from the history store
+    (``benchmarks/history.py``) + the gate's findings."""
+    lines = ["# Perf trend report", ""]
+    lines.append("Verdicts come from `repro.obs.regress`: EWMA "
+                 "baselines (fleet-drift fold semantics) over prior "
+                 "non-smoke hardware-matched runs, thresholds widened "
+                 "to the calibrated noise floor (series scatter + the "
+                 "A/A null row), direction-aware. See README "
+                 "\"Perf regression gate\".")
+    for module in sorted(findings_by_module):
+        findings = findings_by_module[module]
+        run = history.latest_run(module)
+        if run is None:
+            continue
+        info = history.run_info(run)
+        lines += ["", f"## {module}", ""]
+        lines.append(
+            f"Gated run: `{info['git_sha']}`"
+            f"{' (dirty)' if info['dirty'] else ''} · "
+            f"unix_time {info['unix_time']:.0f} · "
+            f"{info['device_count']} device(s) / "
+            f"{info['cpu_cores']} core(s) / {info['backend']} · "
+            f"{'smoke' if info['smoke'] else 'full'} run"
+            f"{' · **ERROR row present**' if info['error'] else ''}")
+        lines += ["", "| metric | n | baseline | latest | Δ% | "
+                      "thr% | verdict | trend | attribution |",
+                  "|---|---|---|---|---|---|---|---|---|"]
+        for f in findings:
+            _, series_vals = history.series(
+                module, f.metric, include_smoke=include_smoke)
+            trend = spark(list(series_vals))
+            if f.verdict in ("info", "no-baseline"):
+                delta = thr = "—"
+                base = "—"
+            else:
+                delta = f"{f.delta_pct:+.1f}"
+                thr = f"{f.threshold_pct:.1f}"
+                base = _fmt_num(f.baseline)
+            verdict = (f"**{f.verdict}**" if f.regressed
+                       else f.verdict)
+            attribution = "; ".join(f.attribution) or "—"
+            lines.append(
+                f"| {f.metric} | {f.n_baseline} | {base} | "
+                f"{_fmt_num(f.value)} | {delta} | {thr} | {verdict} "
+                f"| {trend} | {attribution} |")
+    lines.append("")
+    return "\n".join(lines)
+
+
+def write_trend_report(path, history, findings_by_module, *,
+                       include_smoke: bool = False) -> None:
+    Path(path).write_text(trend_report(
+        history, findings_by_module, include_smoke=include_smoke))
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--section", default="all",
-                    choices=["all", "dryrun", "roofline", "perf"])
+                    choices=["all", "dryrun", "roofline", "perf",
+                             "trend"])
+    ap.add_argument("--history", default="BENCH_history.npz",
+                    help="history store for --section trend")
+    ap.add_argument("--include-smoke", action="store_true")
     args = ap.parse_args()
+    if args.section == "trend":
+        from benchmarks import gate
+        from benchmarks.history import BenchHistory
+
+        history = BenchHistory.load(args.history)
+        findings = gate.evaluate_history(
+            history, include_smoke=args.include_smoke)
+        print(trend_report(history, findings,
+                           include_smoke=args.include_smoke))
+        return
     if args.section in ("all", "dryrun"):
         print("## Dry-run matrix\n")
         print(dryrun_table())

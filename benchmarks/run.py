@@ -17,17 +17,57 @@ fleet module's to ``BENCH_fleet.json`` and the optimizer module's to
 ``BENCH_optimizer.json`` so the perf trajectories are tracked across
 PRs.
 
+Every tracked payload is stamped with provenance — ``git_sha``,
+``dirty``, and hostname-free hardware descriptors (``device_count``,
+``cpu_cores``, ``backend``) — so history rows are comparable across
+machines. ``--history PATH`` ingests the payloads into the append-only
+``benchmarks.history.BenchHistory`` store; ``--gate`` additionally
+runs the noise-aware regression gate (``benchmarks.gate``) over the
+updated history, writes the markdown trend report, and exits nonzero
+on confirmed regressions — the record->detect->enforce loop in one
+command.
+
 Usage: PYTHONPATH=src python -m benchmarks.run [--only <module-substr>]
 ``--quick`` shrinks workload counts; ``--smoke`` (the CI step) shrinks
-them further so every module imports and runs in a few minutes.
+them further so every module imports and runs in a few minutes (smoke
+payloads ingest *tagged* and never anchor gate baselines).
 """
 
 import argparse
 import json
 import os
+import subprocess
 import sys
 import time
 import traceback
+
+
+def provenance() -> dict:
+    """The comparability stamp every tracked payload carries: which
+    code produced the numbers (git SHA + dirty working tree flag) and
+    what hardware class ran them (device/core counts, jax backend —
+    deliberately hostname-free)."""
+
+    def _git(*argv):
+        try:
+            out = subprocess.run(
+                ["git", *argv], capture_output=True, text=True,
+                timeout=10,
+                cwd=os.path.dirname(os.path.abspath(__file__)))
+            return out.stdout.strip() if out.returncode == 0 else ""
+        except OSError:
+            return ""
+
+    import jax  # after any --devices XLA_FLAGS mutation
+
+    return {
+        "git_sha": _git("rev-parse", "--short=12", "HEAD")
+        or "unknown",
+        "dirty": bool(_git("status", "--porcelain")),
+        "device_count": jax.device_count(),
+        "cpu_cores": os.cpu_count() or 0,
+        "backend": jax.default_backend(),
+    }
 
 
 def main() -> None:
@@ -49,6 +89,16 @@ def main() -> None:
                          "--xla_force_host_platform_device_count "
                          "before jax initializes; exercises the "
                          "sharded/pipelined multi-device rows on CPU)")
+    ap.add_argument("--history", default=None,
+                    help="ingest the written payloads into this "
+                         "BenchHistory .npz (appended, atomic)")
+    ap.add_argument("--gate", action="store_true",
+                    help="after ingesting (default history: "
+                         "BENCH_history.npz), run the regression gate "
+                         "+ trend report and exit nonzero on "
+                         "confirmed regressions")
+    ap.add_argument("--report", default="TREND_REPORT.md",
+                    help="trend report path for --gate")
     args = ap.parse_args()
     quick = args.quick or args.smoke
     if args.devices > 0:
@@ -90,6 +140,7 @@ def main() -> None:
 
     rows = [("name", "us_per_call", "derived")]
     written = []
+    prov = None
     for name, fn in modules:
         if args.only and args.only not in name:
             continue
@@ -110,11 +161,16 @@ def main() -> None:
                 params = {"hpo_trials": hpo_trials,
                           "hpo_epochs": hpo_epochs,
                           "n_workloads": n_workloads}
+            if prov is None:
+                prov = provenance()
             payload = {
                 "module": name,
                 "unix_time": time.time(),
                 "quick": quick,
                 "smoke": args.smoke,
+                # provenance: which code / what hardware class —
+                # history rows must be comparable across machines
+                **prov,
                 "params": params,
                 # telemetry snapshot at write time (jit traces /
                 # dispatches / compile seconds, daemon ladder + queue
@@ -132,13 +188,47 @@ def main() -> None:
         print(",".join(str(x) for x in r))
     if args.smoke:
         # CI contract: every tracked BENCH_*.json written by the smoke
-        # run must carry a non-empty telemetry snapshot
+        # run must carry a non-empty telemetry snapshot and the
+        # provenance stamp the history store keys comparability on
         for path in written:
             with open(path) as f:
                 payload = json.load(f)
             assert payload.get("metrics"), (
                 f"{path}: bench payload is missing its telemetry "
                 "'metrics' snapshot")
+            for key in ("git_sha", "dirty", "device_count",
+                        "cpu_cores", "backend"):
+                assert key in payload, (
+                    f"{path}: bench payload is missing provenance "
+                    f"field {key!r}")
+
+    if (args.gate or args.history) and written:
+        hist_path = args.history or "BENCH_history.npz"
+        from benchmarks.history import BenchHistory
+
+        hist = BenchHistory.load_or_new(hist_path)
+        for path in written:
+            with open(path) as f:
+                hist.append(json.load(f))
+        hist.save(hist_path)
+        print(f"history: ingested {len(written)} payload(s) -> "
+              f"{hist_path} ({len(hist)} runs, "
+              f"{hist.n_samples} samples)")
+        if args.gate:
+            from benchmarks import gate, report
+
+            findings = gate.evaluate_history(hist)
+            if args.report:
+                report.write_trend_report(args.report, hist, findings)
+                print(f"gate: trend report -> {args.report}")
+            failures = gate.gate_verdict(hist, findings)
+            if failures:
+                print(f"gate: FAIL — {len(failures)} confirmed "
+                      "regression(s):", file=sys.stderr)
+                for line in failures:
+                    print(f"  {line}", file=sys.stderr)
+                sys.exit(1)
+            print("gate: PASS — no confirmed regressions")
 
 
 if __name__ == "__main__":

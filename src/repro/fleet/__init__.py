@@ -19,7 +19,7 @@
   corruption, burst storms) for robustness tests and benchmarks.
 """
 
-from repro.fleet.drift import (NodeDrift, RollingDrift,
+from repro.fleet.drift import (EwmaMean, NodeDrift, RollingDrift,
                                degradation_factors, degrading_nodes,
                                drift_report, ewma_series)
 from repro.fleet.faults import (FaultLog, FaultPlan, TelemetryEvent,
@@ -32,7 +32,7 @@ from repro.fleet.store import FingerprintStore, atomic_savez
 
 __all__ = [
     "FingerprintStore", "ShardedScorer", "FleetScoringService",
-    "FleetResult", "NodeDrift", "RollingDrift", "drift_report",
+    "EwmaMean", "FleetResult", "NodeDrift", "RollingDrift", "drift_report",
     "degradation_factors", "degrading_nodes", "ewma_series",
     "IngestionDaemon", "save_staging", "load_staging",
     "TelemetryEvent", "FaultPlan", "FaultLog", "fleet_telemetry",

@@ -25,6 +25,43 @@ from repro.core.ranking import ASPECT_OF_TYPE, code_scores
 from repro.fleet.store import FingerprintStore
 
 
+class EwmaMean:
+    """THE drift fold, extracted so every trend consumer shares one
+    set of semantics: ``e_0 = x_0``, ``e_i = (1-a) e_{i-1} + a x_i``,
+    alongside the lifetime mean (the drift baseline). This is exactly
+    the per-node/per-aspect state :class:`RollingDrift` keeps per
+    flush, and what ``obs.regress`` folds over benchmark-history
+    series — so a perf-gate baseline and a fleet-drift baseline are
+    the same computation."""
+
+    __slots__ = ("alpha", "ewma", "total", "n")
+
+    def __init__(self, alpha: float):
+        self.alpha = alpha
+        self.ewma: Optional[float] = None  # None until first update
+        self.total = 0.0
+        self.n = 0
+
+    def update(self, v) -> None:
+        """Fold one observation (first observation seeds the EWMA)."""
+        a = self.alpha
+        self.ewma = (v if self.ewma is None
+                     else (1.0 - a) * self.ewma + a * v)
+        self.total += v
+        self.n += 1
+
+    def fold(self, xs) -> "EwmaMean":
+        """Fold a whole series (float64, in order); returns self."""
+        for v in np.asarray(xs, np.float64):
+            self.update(v)
+        return self
+
+    @property
+    def mean(self) -> float:
+        """Lifetime mean of everything folded so far."""
+        return self.total / self.n if self.n else float("nan")
+
+
 def ewma_series(x: np.ndarray, alpha: float) -> np.ndarray:
     """Full exponentially-weighted moving average series:
     e_0 = x_0, e_i = (1-alpha) * e_{i-1} + alpha * x_i."""
@@ -41,12 +78,9 @@ def ewma_series(x: np.ndarray, alpha: float) -> np.ndarray:
 
 
 def ewma_last(x: np.ndarray, alpha: float) -> float:
-    """Final EWMA value (the fold of :func:`ewma_series`, without
-    materializing the series)."""
-    acc = float(x[0])
-    for v in x[1:]:
-        acc = (1.0 - alpha) * acc + alpha * float(v)
-    return acc
+    """Final EWMA value (the :class:`EwmaMean` fold of
+    :func:`ewma_series`, without materializing the series)."""
+    return float(EwmaMean(alpha).fold(x).ewma)
 
 
 @dataclasses.dataclass
@@ -148,24 +182,15 @@ class RollingDrift:
         row-aligned with ``probs``; rows with aspect ``None`` update
         only the anomaly series."""
         st = self._nodes.setdefault(
-            node, {"ewma": None, "sum": 0.0, "n": 0, "last_t": t_last,
+            node, {"acc": EwmaMean(self.alpha), "last_t": t_last,
                    "aspects": {}})
-        a = self.alpha
-        for p in np.asarray(probs, np.float64):
-            st["ewma"] = (p if st["ewma"] is None
-                          else (1 - a) * st["ewma"] + a * p)
-            st["sum"] += p
-            st["n"] += 1
+        st["acc"].fold(probs)
         st["last_t"] = max(st["last_t"], t_last)
         for asp, q in zip(aspects, np.asarray(quality, np.float64)):
             if asp is None:
                 continue
-            ast = st["aspects"].setdefault(
-                asp, {"ewma": None, "sum": 0.0, "n": 0})
-            ast["ewma"] = (q if ast["ewma"] is None
-                           else (1 - a) * ast["ewma"] + a * q)
-            ast["sum"] += q
-            ast["n"] += 1
+            st["aspects"].setdefault(
+                asp, EwmaMean(self.alpha)).update(q)
 
     def update(self, store: FingerprintStore, results) -> None:
         """Fold a flush's results (``{node: FleetResult}``) into the
@@ -200,15 +225,16 @@ class RollingDrift:
         as :func:`drift_report`'s)."""
         out: Dict[str, NodeDrift] = {}
         for node, st in self._nodes.items():
-            if st["n"] == 0:
+            acc = st["acc"]
+            if acc.n == 0:
                 continue
             out[node] = NodeDrift(
-                node=node, n_scored=st["n"],
-                anomaly_ewma=float(st["ewma"]),
-                anomaly_mean=st["sum"] / st["n"],
-                aspect_ewma={a: float(s["ewma"])
+                node=node, n_scored=acc.n,
+                anomaly_ewma=float(acc.ewma),
+                anomaly_mean=acc.mean,
+                aspect_ewma={a: float(s.ewma)
                              for a, s in st["aspects"].items()},
-                aspect_mean={a: s["sum"] / s["n"]
+                aspect_mean={a: s.mean
                              for a, s in st["aspects"].items()},
                 last_t=st["last_t"])
         return out

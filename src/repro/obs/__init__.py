@@ -16,7 +16,13 @@ The observability substrate every subsystem reports through:
 - ``jaxstat``  — consolidated JIT accounting (:class:`JitSite`:
   tracings, dispatches, per-program compile/run wall seconds) behind
   the registry, replacing the per-module ad-hoc trace counters while
-  keeping their public ``count`` / ``trace_count`` reads.
+  keeping their public ``count`` / ``trace_count`` reads;
+- ``regress``  — noise-aware perf-regression detection over benchmark
+  history series (EWMA baselines sharing fleet drift's fold, noise
+  floors calibrated from series scatter + A/A null rows, per-metric
+  direction policies, telemetry-snapshot attribution). Imported
+  explicitly (``from repro.obs import regress``) because it leans on
+  ``repro.fleet`` — the rest of the plane stays dependency-light.
 
 Everything hangs off one process-wide registry (:func:`registry`) and
 one process-wide tracer (:func:`tracer`); components that need their
@@ -28,7 +34,8 @@ one.
 from repro.obs.jaxstat import JitSite, instance_site
 from repro.obs.metrics import (Counter, Gauge, Histogram,
                                MetricsRegistry, StatsDict, disable,
-                               disabled, enable, enabled, registry)
+                               disabled, enable, enabled, parse_key,
+                               registry)
 from repro.obs.trace import (CAT_DEVICE, CAT_HOST, CAT_LADDER,
                              SpanEvent, Tracer, span, tracer)
 from repro.obs.timeline import (chrome_trace, validate_chrome_trace,
@@ -38,6 +45,7 @@ from repro.obs.timeline import (chrome_trace, validate_chrome_trace,
 __all__ = [
     "Counter", "Gauge", "Histogram", "MetricsRegistry", "StatsDict",
     "registry", "enable", "disable", "enabled", "disabled",
+    "parse_key",
     "Tracer", "SpanEvent", "tracer", "span",
     "CAT_HOST", "CAT_DEVICE", "CAT_LADDER",
     "chrome_trace", "write_chrome_trace", "validate_chrome_trace",

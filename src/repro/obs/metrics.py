@@ -86,6 +86,18 @@ def _fmt_key(name: str, labels: LabelKey) -> str:
     return f"{name}{{{inner}}}"
 
 
+def parse_key(key: str) -> Tuple[str, LabelKey]:
+    """Inverse of the snapshot key format: ``"name{k=v,k2=v2}"`` ->
+    ``("name", (("k", "v"), ("k2", "v2")))``. Label values must not
+    contain ``,`` or ``=`` (they never do — see :func:`_label_key`)."""
+    if key.endswith("}") and "{" in key:
+        name, inner = key[:-1].split("{", 1)
+        labels = tuple(tuple(kv.split("=", 1))
+                       for kv in inner.split(",")) if inner else ()
+        return name, labels  # type: ignore[return-value]
+    return key, ()
+
+
 class Counter:
     """Monotonic labeled counter (int or float increments)."""
 
@@ -331,6 +343,54 @@ class MetricsRegistry:
             else:
                 lines.append(f"{key} {val}")
         return "\n".join(lines)
+
+    def instrument_kind(self, key: str) -> Optional[str]:
+        """``"counter"`` / ``"gauge"`` / ``"histogram"`` for a snapshot
+        key that resolves to a live instrument, else None (stale keys
+        from a historical snapshot)."""
+        with self._lock:
+            inst = self._metrics.get(parse_key(key))
+        if inst is None:
+            return None
+        return type(inst).__name__.lower()
+
+    def snapshot_delta(self, before: Dict[str, object],
+                       after: Dict[str, object]
+                       ) -> Dict[str, Dict[str, object]]:
+        """Typed diff of two :meth:`snapshot` dicts (``before`` ->
+        ``after``): each key maps to ``{"kind", "before", "after",
+        "delta"}`` where **counters** diff (missing side counts as 0,
+        so instruments created between the snapshots still diff
+        cleanly), **gauges** carry the last value (``delta`` is None —
+        a gauge is not a rate), and **histogram** summaries diff their
+        exact ``count``/``sum`` and carry the last quantiles. Types
+        come from the live instrument when the key resolves in this
+        registry; for stale keys (snapshots loaded from an old
+        ``BENCH_*.json`` in another process) dict values are
+        histograms and scalars default to counter semantics — the
+        conservative choice for the regression-attribution pass, which
+        only acts on positive counter deltas.
+        """
+        out: Dict[str, Dict[str, object]] = {}
+        for key in sorted(set(before) | set(after)):
+            b, a = before.get(key), after.get(key)
+            kind = self.instrument_kind(key)
+            if kind is None:
+                kind = ("histogram"
+                        if isinstance(a if a is not None else b, dict)
+                        else "counter")
+            if kind == "histogram":
+                bd = b if isinstance(b, dict) else {}
+                ad = a if isinstance(a, dict) else {}
+                delta = {f: ad.get(f, 0) - bd.get(f, 0)
+                         for f in ("count", "sum")}
+            elif kind == "gauge":
+                delta = None
+            else:
+                delta = (a or 0) - (b or 0)
+            out[key] = {"kind": kind, "before": b, "after": a,
+                        "delta": delta}
+        return out
 
     def reset(self) -> None:
         """Drop every instrument (tests/benchmark isolation)."""

@@ -1,0 +1,381 @@
+"""Perf-plane tests: benchmark history store, noise-aware regression
+gate, snapshot attribution, and the trend report.
+
+The acceptance contract of the gate (ISSUE 9): an injected >=20%
+throughput regression exits nonzero with the offending metric and an
+attribution line; an A/A replay of identical runs exits zero (the
+false-positive rate is bounded by the calibrated noise floor);
+direction policy is respected (p99 increase fails, p99 decrease
+passes); a trace-count bump is labeled a recompile.
+"""
+
+import json
+
+import numpy as np
+import pytest
+
+from benchmarks import gate, report
+from benchmarks.history import BenchHistory, parse_value
+from repro.fleet.drift import EwmaMean, ewma_last, ewma_series
+from repro.obs import regress
+
+
+def payload(t, values, *, module="fleet", smoke=False,
+            git_sha="abc123", dirty=False, device_count=1,
+            cpu_cores=2, backend="cpu", metrics=None, error=False):
+    """One synthetic BENCH_*.json payload, provenance-stamped like
+    benchmarks.run writes them."""
+    rows = [{"name": k, "us_per_call": "", "derived": v}
+            for k, v in values.items()]
+    if error:
+        rows.append({"name": f"{module}.ERROR", "us_per_call": "",
+                     "derived": "RuntimeError('boom')"})
+    return {"module": module, "unix_time": t, "quick": False,
+            "smoke": smoke, "git_sha": git_sha, "dirty": dirty,
+            "device_count": device_count, "cpu_cores": cpu_cores,
+            "backend": backend, "params": {"n": 8},
+            "metrics": metrics or {}, "rows": rows}
+
+
+def fleet_history(rps_series, candidate_rps, *, p99=0.02,
+                  candidate_p99=None, traces=4, candidate_traces=None,
+                  noise_pct=0.0):
+    """History of identical-workload fleet runs ending in a candidate."""
+    h = BenchHistory()
+    snap = lambda tr: {"jax.traces{site=engine/0}": tr,  # noqa: E731
+                       "jax.compile_s{site=engine/0}": tr * 0.5}
+    for i, rps in enumerate(rps_series):
+        h.append(payload(float(i), {
+            "fleet.batched.requests_per_s": f"{rps:.2f}",
+            "fleet.daemon.p99_queue_latency_s": f"{p99:.5f}",
+            "fleet.daemon.obs.noise_pct": f"{noise_pct:.2f}",
+        }, metrics=snap(traces)))
+    cand = h.append(payload(float(len(rps_series)), {
+        "fleet.batched.requests_per_s": f"{candidate_rps:.2f}",
+        "fleet.daemon.p99_queue_latency_s":
+            f"{candidate_p99 if candidate_p99 is not None else p99:.5f}",
+        "fleet.daemon.obs.noise_pct": f"{noise_pct:.2f}",
+    }, metrics=snap(candidate_traces if candidate_traces is not None
+                    else traces)))
+    return h, cand
+
+
+def by_metric(findings):
+    return {f.metric: f for f in findings}
+
+
+# ------------------------------------------------------- value parsing
+
+def test_parse_value():
+    assert parse_value(5) == 5.0
+    assert parse_value(2.5) == 2.5
+    assert parse_value("162.0") == 162.0
+    assert parse_value("14.3x") == 14.3
+    assert parse_value("1.93×") == 1.93
+    assert parse_value("432/432") == 1.0
+    assert parse_value("30/32") == 30 / 32
+    assert parse_value("") is None
+    assert parse_value("RuntimeError('x')") is None
+    assert parse_value("nan") is None
+    assert parse_value(float("inf")) is None
+    assert parse_value("0/0") is None
+
+
+# ------------------------------------------------------- history store
+
+def test_history_round_trip(tmp_path):
+    h, cand = fleet_history([100, 101, 99, 100], 80)
+    path = str(tmp_path / "hist.npz")
+    h.save(path)
+    h2 = BenchHistory.load(path)
+    assert len(h2) == len(h) == 5
+    assert h2.n_samples == h.n_samples
+    np.testing.assert_array_equal(
+        h2.baseline_series("fleet", "fleet.batched.requests_per_s",
+                           before_run=cand),
+        h.baseline_series("fleet", "fleet.batched.requests_per_s",
+                          before_run=cand))
+    assert h2.run_info(cand)["git_sha"] == "abc123"
+    assert h2.hardware_key(cand) == (1, 2, "cpu")
+    assert h2.snapshot(0)["jax.traces{site=engine/0}"] == 4
+    assert h2.params(0) == {"n": 8}
+
+
+def test_history_smoke_rows_excluded_from_baselines():
+    h = BenchHistory()
+    for i in range(3):
+        h.append(payload(float(i),
+                         {"fleet.batched.requests_per_s": "100"}))
+    # smoke run with minimal workloads: far slower, must not anchor
+    h.append(payload(3.0, {"fleet.batched.requests_per_s": "10"},
+                     smoke=True))
+    cand = h.append(payload(
+        4.0, {"fleet.batched.requests_per_s": "99"}))
+    base = h.baseline_series("fleet",
+                             "fleet.batched.requests_per_s",
+                             before_run=cand)
+    assert base.tolist() == [100.0, 100.0, 100.0]
+    with_smoke = h.baseline_series("fleet",
+                                   "fleet.batched.requests_per_s",
+                                   before_run=cand,
+                                   include_smoke=True)
+    assert with_smoke.tolist() == [100.0, 100.0, 100.0, 10.0]
+    # the smoke override argument wins over the payload tag
+    h2 = BenchHistory()
+    h2.append(payload(0.0, {"x.requests_per_s": "1"}), smoke=True)
+    assert h2.run_info(0)["smoke"] is True
+
+
+def test_history_hardware_matching():
+    h = BenchHistory()
+    for i in range(3):
+        h.append(payload(float(i),
+                         {"fleet.batched.requests_per_s": "100"}))
+    # a beefier machine's runs must not anchor this machine's baseline
+    h.append(payload(3.0, {"fleet.batched.requests_per_s": "900"},
+                     cpu_cores=64))
+    cand = h.append(payload(
+        4.0, {"fleet.batched.requests_per_s": "99"}))
+    assert h.baseline_series(
+        "fleet", "fleet.batched.requests_per_s",
+        before_run=cand).tolist() == [100.0] * 3
+    assert len(h.baseline_series(
+        "fleet", "fleet.batched.requests_per_s", before_run=cand,
+        match_hardware=False)) == 4
+
+
+def test_history_error_rows_flagged_not_ingested():
+    h = BenchHistory()
+    run = h.append(payload(0.0, {"fleet.devices": 1}, error=True))
+    assert h.run_info(run)["error"] is True
+    assert "fleet.ERROR" not in h.metrics_for("fleet")
+
+
+# ------------------------------------------------------ the EWMA fold
+
+def test_ewma_mean_is_the_drift_fold():
+    rng = np.random.default_rng(0)
+    xs = rng.normal(10.0, 1.0, size=37)
+    acc = EwmaMean(0.3).fold(xs)
+    assert float(acc.ewma) == ewma_last(xs, 0.3)
+    assert float(acc.ewma) == ewma_series(xs, 0.3)[-1]
+    assert acc.mean == pytest.approx(xs.mean())
+    assert regress.ewma_baseline(xs, 0.3) == ewma_last(xs, 0.3)
+
+
+# -------------------------------------------------- gate: acceptance
+
+def test_injected_20pct_regression_flagged_with_attribution():
+    h, cand = fleet_history([3200, 3230, 3190, 3210, 3200, 3220],
+                            3200 * 0.8, candidate_traces=9)
+    findings = by_metric(gate.evaluate_module(h, "fleet", run=cand))
+    f = findings["fleet.batched.requests_per_s"]
+    assert f.regressed
+    assert f.delta_pct < -15.0
+    assert any("recompile" in a for a in f.attribution), f.attribution
+    failures = gate.gate_verdict(h, {"fleet": list(findings.values())})
+    assert any("fleet.batched.requests_per_s" in x for x in failures)
+    assert any("recompile" in x for x in failures)
+
+
+def test_aa_replay_of_identical_runs_passes():
+    h, cand = fleet_history([3200.0] * 6, 3200.0)
+    findings = gate.evaluate_module(h, "fleet", run=cand)
+    assert not any(f.regressed for f in findings)
+    assert gate.gate_verdict(h, {"fleet": findings}) == []
+    # and the throughput metric really was judged, not skipped
+    f = by_metric(findings)["fleet.batched.requests_per_s"]
+    assert f.verdict == regress.VERDICT_OK and f.n_baseline == 6
+
+
+def test_direction_policy_p99():
+    # p99 latency increase = regression ...
+    h, cand = fleet_history([3200.0] * 6, 3200.0, p99=0.02,
+                            candidate_p99=0.03)
+    f = by_metric(gate.evaluate_module(h, "fleet", run=cand))[
+        "fleet.daemon.p99_queue_latency_s"]
+    assert f.regressed and f.direction == regress.DIR_LOWER
+    # ... and a decrease passes (improvement, not regression)
+    h2, cand2 = fleet_history([3200.0] * 6, 3200.0, p99=0.02,
+                              candidate_p99=0.01)
+    f2 = by_metric(gate.evaluate_module(h2, "fleet", run=cand2))[
+        "fleet.daemon.p99_queue_latency_s"]
+    assert f2.verdict == regress.VERDICT_IMPROVEMENT
+    assert gate.gate_verdict(
+        h2, {"fleet": [f2]}) == []
+
+
+def test_noise_floor_bounds_false_positives():
+    # a series with ~8% swings: a 5%-below-baseline candidate is
+    # within the calibrated noise floor and must NOT be flagged ...
+    noisy = [3200, 2950, 3420, 3050, 3380, 2980, 3350, 3020]
+    h, cand = fleet_history(noisy, np.mean(noisy) * 0.95)
+    f = by_metric(gate.evaluate_module(h, "fleet", run=cand))[
+        "fleet.batched.requests_per_s"]
+    assert f.threshold_pct > 10.0  # widened beyond the policy's 10%
+    assert not f.regressed
+    # ... while the same candidate against a quiet series is flagged
+    quiet = [3200, 3210, 3195, 3205, 3200, 3198, 3207, 3201]
+    h2, cand2 = fleet_history(quiet, np.mean(quiet) * 0.85)
+    f2 = by_metric(gate.evaluate_module(h2, "fleet", run=cand2))[
+        "fleet.batched.requests_per_s"]
+    assert f2.regressed
+
+
+def test_aa_null_row_widens_threshold():
+    # the bench's own A/A null measurement (obs.noise_pct row) widens
+    # every threshold of that run's module
+    h, cand = fleet_history([3200.0] * 6, 3200 * 0.89,
+                            noise_pct=12.0)
+    f = by_metric(gate.evaluate_module(h, "fleet", run=cand))[
+        "fleet.batched.requests_per_s"]
+    assert f.threshold_pct == pytest.approx(12.0)
+    assert not f.regressed
+
+
+def test_insufficient_history_never_gates():
+    h, cand = fleet_history([3200.0] * 2, 1.0)  # min_history is 3
+    findings = gate.evaluate_module(h, "fleet", run=cand)
+    assert all(f.verdict in (regress.VERDICT_NO_BASELINE,
+                             regress.VERDICT_INFO)
+               for f in findings)
+    assert gate.gate_verdict(h, {"fleet": findings}) == []
+
+
+def test_error_row_fails_the_gate():
+    h = BenchHistory()
+    for i in range(4):
+        h.append(payload(float(i), {"fleet.devices": 1}))
+    h.append(payload(4.0, {"fleet.devices": 1}, error=True))
+    findings = gate.evaluate_history(h)
+    failures = gate.gate_verdict(h, findings)
+    assert any("ERROR" in x for x in failures)
+
+
+# ---------------------------------------------------------- policies
+
+def test_default_policy_heuristics():
+    assert regress.default_policy(
+        "fleet.batched.requests_per_s").direction == regress.DIR_HIGHER
+    assert regress.default_policy(
+        "optimizer.speedup").direction == regress.DIR_HIGHER
+    assert regress.default_policy(
+        "fleet.daemon.p99_queue_latency_s").direction == \
+        regress.DIR_LOWER
+    assert regress.default_policy(
+        "fleet.daemon.events").direction == regress.DIR_INFO
+    assert regress.default_policy(
+        "fleet.store_rows").direction == regress.DIR_INFO
+    # explicit override beats the heuristic
+    over = regress.policy_table({"fleet.daemon.events":
+                                 ("lower", 1.0)})
+    p = regress.default_policy("fleet.daemon.events", over)
+    assert p.direction == regress.DIR_LOWER
+    assert p.rel_threshold_pct == 1.0
+
+
+def test_bench_modules_declare_policies():
+    for module in ("fleet", "optimizer"):
+        table = gate.module_policies(module)
+        assert table, f"bench_{module} lost its POLICIES table"
+        for name, pol in table.items():
+            assert isinstance(pol, regress.MetricPolicy), name
+    table = gate.module_policies("fleet")
+    assert table["fleet.batched.requests_per_s"].direction == \
+        regress.DIR_HIGHER
+    assert table["fleet.daemon.p99_queue_latency_s"].direction == \
+        regress.DIR_LOWER
+    # trace parity gates at zero tolerance
+    opt = gate.module_policies("optimizer")
+    assert opt["optimizer.trace_parity"].rel_threshold_pct == 0.0
+
+
+def test_trace_parity_drop_fails():
+    h = BenchHistory()
+    for i in range(4):
+        h.append(payload(float(i),
+                         {"optimizer.trace_parity": "432/432"},
+                         module="optimizer"))
+    cand = h.append(payload(4.0,
+                            {"optimizer.trace_parity": "430/432"},
+                            module="optimizer"))
+    f = by_metric(gate.evaluate_module(h, "optimizer", run=cand))[
+        "optimizer.trace_parity"]
+    assert f.regressed
+
+
+# ----------------------------------------------------- CLI + report
+
+def test_gate_cli_exit_codes(tmp_path):
+    # regression -> 1, with the offending metric on stderr
+    h, _ = fleet_history([3200.0] * 6, 3200 * 0.8,
+                         candidate_traces=9)
+    bad = str(tmp_path / "bad.npz")
+    h.save(bad)
+    rep = str(tmp_path / "trend.md")
+    assert gate.main(["--history", bad, "--report", rep]) == 1
+    text = open(rep).read()
+    assert "fleet.batched.requests_per_s" in text
+    assert "recompile" in text
+    assert "**regression**" in text
+    # A/A -> 0
+    h2, _ = fleet_history([3200.0] * 6, 3200.0)
+    good = str(tmp_path / "good.npz")
+    h2.save(good)
+    assert gate.main(["--history", good, "--report", ""]) == 0
+    # --check-schema never enforces verdicts, but validates the file
+    assert gate.main(["--history", bad, "--report", "",
+                      "--check-schema"]) == 0
+    # broken artifact -> 2
+    missing = str(tmp_path / "missing.npz")
+    assert gate.main(["--history", missing, "--report", ""]) == 2
+    garbage = str(tmp_path / "garbage.npz")
+    with open(garbage, "w") as f:
+        f.write("not an npz")
+    assert gate.main(["--history", garbage, "--report", ""]) == 2
+
+
+def test_trend_report_renders_from_history(tmp_path):
+    h, _ = fleet_history([3200, 3230, 3190, 3210], 3200.0)
+    findings = gate.evaluate_history(h)
+    text = report.trend_report(h, findings)
+    assert "## fleet" in text
+    assert "fleet.batched.requests_per_s" in text
+    assert "abc123" in text  # provenance surfaced
+    # sparklines render from the series
+    assert any(ch in text for ch in "▁▂▃▄▅▆▇█")
+    path = tmp_path / "trend.md"
+    report.write_trend_report(str(path), h, findings)
+    assert path.read_text() == text
+
+
+def test_spark():
+    assert report.spark([]) == ""
+    assert report.spark([1.0, 1.0, 1.0]) == "▄▄▄"
+    s = report.spark([0, 1, 2, 3])
+    assert s[0] == "▁" and s[-1] == "█"
+    assert len(report.spark(list(range(100)), width=16)) == 16
+
+
+# ----------------------------------------------- run.py integration
+
+def test_run_py_ingests_payloads(tmp_path, monkeypatch):
+    """run.py --history appends the written payloads (tagged smoke)
+    into the store — exercised through the same BenchHistory calls
+    run.main performs, on payload files from disk."""
+    p1 = tmp_path / "BENCH_fleet.json"
+    p1.write_text(json.dumps(payload(
+        1.0, {"fleet.batched.requests_per_s": "100"}, smoke=True)))
+    hist_path = str(tmp_path / "BENCH_history.npz")
+    hist = BenchHistory.load_or_new(hist_path)
+    with open(p1) as f:
+        hist.append(json.load(f))
+    hist.save(hist_path)
+    again = BenchHistory.load_or_new(hist_path)
+    assert len(again) == 1
+    assert again.run_info(0)["smoke"] is True
+    # second ingestion round appends, never rewrites
+    with open(p1) as f:
+        again.append(json.load(f))
+    again.save(hist_path)
+    assert len(BenchHistory.load(hist_path)) == 2
