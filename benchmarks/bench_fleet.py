@@ -29,6 +29,16 @@ A fifth section (``fleet.daemon.obs.*``) reruns the clean daemon
 workload with the telemetry plane enabled vs ``obs.disabled()`` and
 asserts always-on observability costs <2% sustained req/s.
 
+A sixth section (``fleet.swap.*``) measures the model plane's
+zero-downtime hot swap: the same seeded stream runs once steady-state
+and once with an identical candidate canaried + promoted mid-stream,
+reporting total flush wall time for both (the swap run's canary
+shadow scoring and warm dispatches land inside its timed flush
+windows) and asserting the stored scores stay bit-identical — the
+swap must be invisible in results, and its wall cost explicit. Both
+runs pin ``service_time_scale=0`` so flush partitioning is
+event-deterministic and the bit-parity check is exact.
+
 Scoring throughput does not depend on the parameter values, so the
 model stays untrained (init only).
 """
@@ -63,6 +73,9 @@ POLICIES = {
     "fleet.daemon.obs.overhead_pct": "info",  # asserted in-bench (<2%+noise)
     "fleet.daemon.obs.noise_pct": "info",  # the A/A null itself
     "fleet.daemon.faulty.peak_staged_rows": "info",
+    "fleet.swap.steady_flush_wall_s": ("lower", 25.0),
+    "fleet.swap.hotswap_flush_wall_s": ("lower", 25.0),
+    "fleet.swap.wall_ratio": "info",  # asserted bit-equal in-bench
     "fleet.wall_s": "info",  # whole-module wall incl. compiles
 }
 
@@ -382,6 +395,78 @@ def _run_obs_overhead(rows, machines, history, pre, model, params,
         "— budget is <2% above the measured noise floor")
 
 
+def _run_swap(rows, machines, history, pre, model, params,
+              quick: bool):
+    """Hot-swap cost: total flush wall time of the same seeded stream
+    steady-state vs with a mid-stream canary + promote (identical
+    candidate). The swap run pays shadow scoring + warm dispatches
+    inside the daemon's timed flush windows — that cost shows up in
+    its flush wall total — while the stored scores must stay
+    bit-identical to the steady run. ``service_time_scale=0`` pins
+    the virtual clock so flush partitioning (and therefore per-row
+    scoring context) is a pure function of the event stream: wall
+    noise can't shift flush boundaries between the two runs."""
+    import tempfile
+
+    import numpy as np
+
+    from repro.fleet import (FleetScoringService, IngestionDaemon,
+                             ModelPlane, fleet_telemetry)
+
+    n_rounds = 6 if quick else 10
+
+    def one_run(with_swap: bool):
+        svc = FleetScoringService(model, params, pre, sharded=False)
+        svc.seed_history(history)
+        svc.score_round(fleet_telemetry(  # warm (compile)
+            machines, rounds=1, runs_per_type=1, seed=70)[0].frame)
+        daemon = IngestionDaemon(svc,
+                                 capacity_rows=64 * len(machines),
+                                 flush_interval=0.25,
+                                 min_flush_gap=0.02,
+                                 service_time_scale=0.0)
+        events = fleet_telemetry(machines, rounds=n_rounds,
+                                 runs_per_type=1, seed=71,
+                                 interval=1.0, jitter=0.3)
+        if not with_swap:
+            daemon.run(events)
+        else:
+            plane = ModelPlane(
+                svc, tempfile.mkdtemp(prefix="bench-registry-"),
+                daemon=daemon, canary_flushes=1, watch_flushes=2,
+                min_health_shift=1.0, latency_budget=100.0,
+                # the candidate is the incumbent, so the canary gate
+                # must not reject on the model's own baseline alarm
+                # rate; likewise the drift-retrain loop would submit
+                # its own candidate mid-stream and break both the
+                # promotions==1 contract and the bit-parity assert
+                fp_budget=1.0, drift_flag_flushes=10**9)
+            plane.bootstrap(params)
+            k = len(events) // 2
+            daemon.run(events[:k], drain=False)
+            plane.submit_candidate(params, source="bench")
+            daemon.run(events[k:], drain=True)
+            assert plane.status()["promotions"] == 1, (
+                "bench candidate was not promoted")
+        return daemon.stats(), svc
+
+    st_a, svc_a = one_run(False)
+    st_b, svc_b = one_run(True)
+    # the swap must be invisible in the data plane
+    assert st_a["events_seen"] == st_b["events_seen"]
+    assert len(svc_a.store) == len(svc_b.store), (
+        "hot-swap run scored a different number of rows")
+    assert np.array_equal(svc_a.store.anomaly, svc_b.store.anomaly,
+                          equal_nan=True), (
+        "hot-swap run's stored scores diverged from steady state")
+    wall_a, wall_b = st_a["flush_wall_s"], st_b["flush_wall_s"]
+    rows.append(("fleet.swap.steady_flush_wall_s", "", f"{wall_a:.4f}"))
+    rows.append(("fleet.swap.hotswap_flush_wall_s", "",
+                 f"{wall_b:.4f}"))
+    rows.append(("fleet.swap.wall_ratio", "",
+                 f"{wall_b / max(wall_a, 1e-9):.2f}x"))
+
+
 def run(rows, n_nodes: int = 32, context_runs: int = 16,
         n_rounds: int = 4, quick: bool = False):
     import jax
@@ -439,6 +524,7 @@ def run(rows, n_nodes: int = 32, context_runs: int = 16,
                                 params, quick)
     _run_obs_overhead(rows, machines, history, pre, model, params,
                       quick)
+    _run_swap(rows, machines, history, pre, model, params, quick)
     # workload parameters, recorded into BENCH_fleet.json by run.py
     return {"n_nodes": n_nodes, "context_runs": context_runs,
             "n_rounds": n_rounds, "burst": burst, "window": window,

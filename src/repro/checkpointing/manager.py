@@ -33,13 +33,26 @@ class CheckpointManager:
         self.dir.mkdir(parents=True, exist_ok=True)
         self.keep_last = keep_last
         self.async_save = async_save
+        #: steps exempt from keep-last GC (e.g. the model plane pins
+        #: the incumbent + previous versions however old they are)
+        self.pinned: set = set()
         self._queue: "queue.Queue" = queue.Queue()
         self._worker: Optional[threading.Thread] = None
         self._error: Optional[BaseException] = None
 
+    def _raise_pending(self):
+        """Surface a failed background write on the *next* call (a
+        silently-lost checkpoint is a corrupted restore point waiting
+        to happen)."""
+        if self._error is not None:
+            err, self._error = self._error, None
+            raise err
+
     # ------------------------------------------------------------------ save
     def save(self, step: int, tree: Any, extra: Optional[Dict] = None):
-        """Snapshot to host memory synchronously; write async if enabled."""
+        """Snapshot to host memory synchronously; write async if
+        enabled. Raises any error a previous async write hit."""
+        self._raise_pending()
         flat = tree_flatten_with_paths(tree)
         host = {path: np.asarray(leaf) for path, leaf in flat}
         payload = (step, host, dict(extra or {}))
@@ -81,7 +94,8 @@ class CheckpointManager:
         self._gc()
 
     def _gc(self):
-        steps = sorted(self.all_steps())
+        steps = sorted(s for s in self.all_steps()
+                       if s not in self.pinned)
         for s in steps[: -self.keep_last]:
             for f in (self.dir / f"step_{s}.npz",
                       self.dir / f"meta_{s}.json"):
@@ -95,9 +109,17 @@ class CheckpointManager:
         risky operation, and test determinism)."""
         if self._worker is not None and self._worker.is_alive():
             self._queue.join()
-        if self._error is not None:
-            err, self._error = self._error, None
-            raise err
+        self._raise_pending()
+
+    def close(self):
+        """Stop the async writer (drains queued saves first) and raise
+        any pending write error. Safe to call repeatedly."""
+        if self._worker is not None and self._worker.is_alive():
+            self._queue.join()
+            self._queue.put(None)
+            self._worker.join(timeout=30.0)
+        self._worker = None
+        self._raise_pending()
 
     # --------------------------------------------------------------- restore
     def all_steps(self):

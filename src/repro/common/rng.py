@@ -35,6 +35,7 @@ STREAM_WORKLOAD_PARAMS = 31  # scout workload latent demand vectors
 STREAM_CONTENTION = 32  # scout per-(workload, config) contention noise
 STREAM_ARRIVALS = 33  # fleet telemetry arrival-process jitter
 STREAM_FAULTS = 34  # fleet fault-injection decisions (fleet.faults)
+STREAM_RETRY = 35  # scorer retry-backoff jitter (fleet.service)
 
 
 def root_key(seed: int):

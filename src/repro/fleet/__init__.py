@@ -16,7 +16,11 @@
   explicit backpressure ladder and crash-safe shutdown;
 - ``faults``  — deterministic seeded fault injection over telemetry
   streams (dropout, stalls, delays, duplicates, reordering, NaN/Inf
-  corruption, burst storms) for robustness tests and benchmarks.
+  corruption, burst storms) for robustness tests and benchmarks;
+- ``modelplane`` — :class:`ModelRegistry` (versioned, crash-safe
+  parameter checkpoints) and :class:`ModelPlane` (canary-gated
+  zero-downtime promote/rollback on the live service, with the
+  drift-triggered retrain loop).
 """
 
 from repro.fleet.drift import (EwmaMean, NodeDrift, RollingDrift,
@@ -29,6 +33,9 @@ from repro.fleet.ingest import IngestionDaemon, load_staging, save_staging
 from repro.fleet.service import FleetResult, FleetScoringService
 from repro.fleet.shard import ShardedScorer
 from repro.fleet.store import FingerprintStore, atomic_savez
+# last: modelplane leans on repro.obs.regress, which imports
+# repro.fleet.drift — already initialized by this point
+from repro.fleet.modelplane import ModelPlane, ModelRegistry
 
 __all__ = [
     "FingerprintStore", "ShardedScorer", "FleetScoringService",
@@ -37,4 +44,5 @@ __all__ = [
     "IngestionDaemon", "save_staging", "load_staging",
     "TelemetryEvent", "FaultPlan", "FaultLog", "fleet_telemetry",
     "inject_faults", "corrupt_frame", "atomic_savez",
+    "ModelPlane", "ModelRegistry",
 ]

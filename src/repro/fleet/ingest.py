@@ -120,6 +120,13 @@ class IngestionDaemon:
         self._stop = threading.Event()
         self._sources: List[Callable[[float],
                                      Sequence[TelemetryEvent]]] = []
+        # flush hooks: called under the lock right after scoring, and
+        # BEFORE the results feed rolling drift / the results log —
+        # a hook may mutate the results dict in place (the model
+        # plane's rollback repair swaps bad-candidate scores for the
+        # incumbent's before anything downstream sees them)
+        self._flush_hooks: List[Callable[[Dict[str, object], str],
+                                         None]] = []
         self._results: Dict[str, List] = {}
         self._closed = False
         self.degraded = False
@@ -140,6 +147,7 @@ class IngestionDaemon:
         self._degrade_unscored_rows = 0
         self._degrade_entries = 0
         self._recoveries = 0
+        self._flush_failures = 0
         self._peak_staged_rows = 0
         self._flush_wall_s = 0.0
         self._run_wall_s = 0.0
@@ -417,6 +425,16 @@ class IngestionDaemon:
         with self._lock:
             return self._flush(trigger="manual")
 
+    def add_flush_hook(self, fn: Callable[[Dict[str, object], str],
+                                          None]) -> None:
+        """Register a post-scoring hook ``fn(results, trigger)``, run
+        under the daemon lock before the results reach rolling drift
+        or the results log (so it may repair them in place). The model
+        plane's canary/watch state machine attaches here — hooks run
+        at every flush boundary, the only place parameter swaps
+        happen."""
+        self._flush_hooks.append(fn)
+
     def _flush(self, trigger: str) -> Dict[str, object]:
         staged, self._staged = self._staged, []
         self._staged_rows = 0
@@ -430,15 +448,33 @@ class IngestionDaemon:
         self._latency.observe_many(
             [self.now - s.arrival for s in staged])
         staged.sort(key=lambda s: float(s.frame.t.min()))
-        if self.degraded:
-            self._degraded_flushes += 1
-            results = self._flush_degraded(staged)
-        else:
-            for s in staged:
-                # pre-validated at intake: don't pay validation twice
-                if len(s.frame):
-                    self.service._pending.append(s.frame)
-            results = self.service.flush()
+        try:
+            if self.degraded:
+                self._degraded_flushes += 1
+                results = self._flush_degraded(staged)
+            else:
+                for s in staged:
+                    # pre-validated at intake: don't pay validation
+                    # twice
+                    if len(s.frame):
+                        self.service._pending.append(s.frame)
+                results = self.service.flush()
+        except Exception as e:  # noqa: BLE001 — pipeline must survive
+            # the service already retried transient scorer failures
+            # with backoff (``dispatch_retries``); a terminal failure
+            # loses this flush's scores, not the pipeline: the rows
+            # are already durable in the store (unscored context) and
+            # the daemon keeps consuming the stream
+            self._flush_failures += 1
+            self.tracer.instant("ingest.flush_failed",
+                                obs_trace.CAT_LADDER,
+                                args={"trigger": trigger,
+                                      "rows": n_rows,
+                                      "error": type(e).__name__},
+                                ts=self.now)
+            results = {}
+        for hook in self._flush_hooks:
+            hook(results, trigger)
         dt = time.perf_counter() - t0
         self._flush_wall_s += dt
         self.now += dt * self.service_time_scale
@@ -601,6 +637,9 @@ class IngestionDaemon:
             "degraded_flushes": self._degraded_flushes,
             "degrade_unscored_rows": self._degrade_unscored_rows,
             "recoveries": self._recoveries,
+            "flush_failures": self._flush_failures,
+            "scorer_retries": getattr(self.service,
+                                      "_scorer_retries", 0),
             "flush_wall_s": self._flush_wall_s,
             "run_wall_s": self._run_wall_s,
             "virtual_now": self.now,

@@ -39,13 +39,15 @@ produces *bit-identical* scores to rescoring the full history
 from __future__ import annotations
 
 import dataclasses
+import threading
 import time
-from typing import Dict, List, Optional, Sequence
+from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
 from repro.common.bucketing import next_pow2
 from repro.common.mesh import stack_padded
+from repro.common.rng import STREAM_RETRY, folded_generator
 from repro.core.graph_data import chain_structure
 from repro.core.model import PeronaModel
 from repro.core.preprocess import Preprocessor
@@ -86,7 +88,10 @@ class FleetScoringService:
                  min_bucket: int = MIN_BUCKET,
                  sharded: bool = True,
                  devices: Optional[Sequence] = None,
-                 on_invalid: str = "quarantine"):
+                 on_invalid: str = "quarantine",
+                 dispatch_retries: int = 2,
+                 retry_backoff_s: float = 0.05,
+                 retry_seed: int = 0):
         import jax
 
         from repro.core.graph_data import P_PREDECESSORS
@@ -106,12 +111,27 @@ class FleetScoringService:
         if devices is None:
             devices = jax.devices() if sharded else jax.devices()[:1]
         self.scorer = ShardedScorer(model, preproc, devices=devices)
+        self.dispatch_retries = dispatch_retries
+        self.retry_backoff_s = retry_backoff_s
+        self.retry_seed = retry_seed
+        # re-entrant: model-plane swaps land at flush boundaries by
+        # taking this lock, and a flush hook promoting from inside a
+        # flush re-enters it on the same thread
+        self._lock = threading.RLock()
         self._pending: List[object] = []  # frames queued for flush
         self._quarantine: List[object] = []  # rejected rows, as frames
+        # stacked-shape signatures seen so far, so warm() can compile
+        # + device-place a candidate before a hot swap
+        self._stack_sigs: Dict[Tuple[int, int],
+                               Dict[str, Tuple[tuple, object]]] = {}
         self._requests_served = 0
         self._rows_scored = 0
         self._flushes = 0
         self._dispatches = 0
+        self._shadow_dispatches = 0
+        self._scorer_retries = 0
+        self._swaps = 0
+        self._warm_dispatches = 0
         self._quarantined_nonfinite = 0
         self._quarantined_unknown_type = 0
         self._wall_s = 0.0
@@ -127,6 +147,11 @@ class FleetScoringService:
         }
         self._m_flushes = reg.counter("fleet.flushes", site=site)
         self._m_rows = reg.counter("fleet.rows_scored", site=site)
+        self._m_retries = reg.counter("fleet.scorer_retries", site=site)
+        self._m_swaps = reg.counter("fleet.param_swaps", site=site)
+        # per-flush wall-clock histogram: the model plane's canary gate
+        # reads its quantiles as the incumbent latency baseline
+        self._h_flush = reg.histogram("fleet.flush_wall_s", site=site)
 
     # --------------------------------------------------------- validation
     def validate_frame(self, frame) -> Dict[str, np.ndarray]:
@@ -187,7 +212,8 @@ class FleetScoringService:
         reach the store or the jitted scorer."""
         frame = self._admit(as_frame(data))
         if len(frame):
-            self._pending.append(frame)
+            with self._lock:
+                self._pending.append(frame)
 
     def seed_history(self, data: FrameOrRecords) -> None:
         """Append unscored context rows (e.g. a prior acquisition) with
@@ -208,14 +234,17 @@ class FleetScoringService:
     # -------------------------------------------------------------- flush
     def flush(self) -> Dict[str, FleetResult]:
         """Score every pending request in shape-bucketed micro-batches
-        (one sharded dispatch per distinct row bucket)."""
-        if not self._pending:
-            return {}
-        t0 = time.perf_counter()
-        span_args: Dict[str, object] = {}
-        with obs_trace.span("fleet.flush", args=span_args):
-            results = self._flush_locked(t0, span_args)
-        return results
+        (one sharded dispatch per distinct row bucket). Holds the
+        service lock end to end, so parameter swaps
+        (:meth:`swap_params`) only ever land at flush boundaries."""
+        with self._lock:
+            if not self._pending:
+                return {}
+            t0 = time.perf_counter()
+            span_args: Dict[str, object] = {}
+            with obs_trace.span("fleet.flush", args=span_args):
+                results = self._flush_locked(t0, span_args)
+            return results
 
     def _flush_locked(self, t0: float,
                       span_args: Dict[str, object]
@@ -229,7 +258,23 @@ class FleetScoringService:
         first_id = self.store.append(
             new_all, features=prepare_features(self.preproc, new_all))
 
-        # per-request context gather + input assembly (pure numpy)
+        requests = self._assemble_requests(first_id)
+        results, n_buckets = self._dispatch_requests(
+            self.params, requests, attach=True)
+        self._requests_served += len(requests)
+        self._flushes += 1
+        dt = time.perf_counter() - t0
+        self._wall_s += dt
+        self._m_flushes.inc()
+        self._h_flush.observe(dt)
+        self._m_rows.inc(sum(len(r.row_ids) for r in results.values()))
+        span_args.update(requests=len(requests), buckets=n_buckets,
+                         rows=int(len(new_all)))
+        return results
+
+    def _assemble_requests(self, first_id: int) -> List[dict]:
+        """Per-node context gather + input assembly (pure numpy) for
+        every store row with id >= ``first_id`` ("the round")."""
         frame = self.store.frame
         feats = self.store.features
         n_types = max(len(frame.benchmark_types), 1)
@@ -252,8 +297,16 @@ class FleetScoringService:
             requests.append(
                 {"node": node, "idx": idx, "is_new": is_new,
                  "bucket": bucket, "inputs": inputs})
+        return requests
 
-        # bucket-grouped stacked dispatches
+    def _dispatch_requests(self, params, requests: List[dict], *,
+                           attach: bool
+                           ) -> Tuple[Dict[str, FleetResult], int]:
+        """Bucket-grouped stacked dispatches of assembled requests
+        with the given ``params``. ``attach=True`` is the live flush
+        path (scores written to the store, throughput counters);
+        ``attach=False`` is read-only shadow scoring (canary gates) —
+        the store is never touched."""
         results: Dict[str, FleetResult] = {}
         buckets: Dict[int, List[dict]] = {}
         for req in requests:
@@ -265,16 +318,24 @@ class FleetScoringService:
                 stack = stack_padded(
                     [req["inputs"] for req in group],
                     self.scorer.pad_requests(len(group)))
-            out = self.scorer.score_stack(self.params, stack)
-            self._dispatches += 1
+            r_pad = stack[next(iter(stack))].shape[0]
+            self._stack_sigs[(r_pad, bucket)] = {
+                k: (v.shape, v.dtype) for k, v in stack.items()}
+            out = self._dispatch_with_retry(params, stack)
+            if attach:
+                self._dispatches += 1
+            else:
+                self._shadow_dispatches += 1
             for r, req in enumerate(group):
                 idx, is_new = req["idx"], req["is_new"]
                 m = len(idx)
                 prob = out["anomaly_prob"][r, :m]
                 codes = out["codes"][r, :m]
                 logits = out["type_logits"][r, :m]
-                self.store.attach(idx[is_new], prob[is_new],
-                                  codes[is_new])
+                if attach:
+                    self.store.attach(idx[is_new], prob[is_new],
+                                      codes[is_new])
+                    self._rows_scored += int(is_new.sum())
                 results[req["node"]] = FleetResult(
                     node=req["node"],
                     anomaly_prob=prob[is_new],
@@ -283,15 +344,77 @@ class FleetScoringService:
                     row_ids=self.store.row_id[idx[is_new]],
                     context_row_ids=self.store.row_id[idx[~is_new]],
                     bucket=bucket)
-                self._rows_scored += int(is_new.sum())
-        self._requests_served += len(requests)
-        self._flushes += 1
-        self._wall_s += time.perf_counter() - t0
-        self._m_flushes.inc()
-        self._m_rows.inc(sum(len(r.row_ids) for r in results.values()))
-        span_args.update(requests=len(requests), buckets=len(buckets),
-                         rows=int(len(new_all)))
-        return results
+        return results, len(buckets)
+
+    def _dispatch_with_retry(self, params, stack):
+        """One sharded dispatch with bounded retry-with-backoff for
+        transient scorer failures (seeded jitter via ``common.rng`` so
+        backoff schedules replay deterministically). The stacked numpy
+        buffers stay valid across attempts — only the device copies
+        are donated — so a retry re-runs the identical dispatch."""
+        for attempt in range(self.dispatch_retries + 1):
+            try:
+                return self.scorer.score_stack(params, stack)
+            except Exception:
+                if attempt >= self.dispatch_retries:
+                    raise
+                self._scorer_retries += 1
+                self._m_retries.inc()
+                base = self.retry_backoff_s * (2 ** attempt)
+                jitter = folded_generator(
+                    self.retry_seed, STREAM_RETRY,
+                    self._scorer_retries).uniform(0.0, base)
+                time.sleep(min(base + jitter, 1.0))
+
+    # ----------------------------------------------------- model plane
+    def swap_params(self, new_params):
+        """Atomically replace the scoring parameters; returns the old
+        ones. Taken under the service lock, so the swap lands at a
+        flush boundary — every request of one flush is scored by
+        exactly one parameter set, and nothing pending is dropped or
+        rescored (``repro.fleet.modelplane`` hot-swap path)."""
+        with self._lock:
+            old, self.params = self.params, new_params
+            self._swaps += 1
+            self._m_swaps.inc()
+            return old
+
+    def warm(self, params) -> int:
+        """Pre-dispatch ``params`` through every stacked program shape
+        seen so far (zero-filled inputs, outputs discarded): any
+        compile and the host->device parameter transfer happen here,
+        off the request path, so the subsequent :meth:`swap_params`
+        costs no request latency. Returns the number of shapes
+        warmed."""
+        with self._lock:
+            sigs = list(self._stack_sigs.items())
+        for _, sig in sigs:
+            stack = {k: np.zeros(shape, dtype)
+                     for k, (shape, dtype) in sig.items()}
+            self._dispatch_with_retry(params, stack)
+            self._warm_dispatches += 1
+        return len(sigs)
+
+    def rescore(self, first_id: int, params=None, *,
+                attach: bool = False) -> Dict[str, FleetResult]:
+        """Re-score every store row with id >= ``first_id`` through
+        the exact flush path (same per-node context windows, row
+        buckets and stacked dispatches) without re-appending anything.
+        With ``attach=False`` (shadow mode) the store is untouched —
+        this is the canary gate's side-by-side scoring of a candidate
+        against the incumbent's attached scores. ``attach=True``
+        overwrites the stored scores (the rollback repair path).
+        Scores are bit-identical to what the original flushes computed
+        for the same parameters: each row's score depends only on its
+        own chain's receptive field, which this gather reproduces."""
+        with self._lock:
+            if len(self.store) == 0 or first_id >= self.store.next_id:
+                return {}
+            p = self.params if params is None else params
+            requests = self._assemble_requests(first_id)
+            results, _ = self._dispatch_requests(p, requests,
+                                                 attach=attach)
+            return results
 
     # -------------------------------------------------------------- stats
     @property
@@ -305,6 +428,10 @@ class FleetScoringService:
             "rows_scored": self._rows_scored,
             "flushes": self._flushes,
             "dispatches": self._dispatches,
+            "shadow_dispatches": self._shadow_dispatches,
+            "scorer_retries": self._scorer_retries,
+            "param_swaps": self._swaps,
+            "warm_dispatches": self._warm_dispatches,
             "quarantined_nonfinite": self._quarantined_nonfinite,
             "quarantined_unknown_type": self._quarantined_unknown_type,
             "quarantined_rows": (self._quarantined_nonfinite

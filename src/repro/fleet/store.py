@@ -169,6 +169,11 @@ class FingerprintStore:
         return self._frame_cache
 
     @property
+    def next_id(self) -> int:
+        """The global row id the next appended row will receive."""
+        return self._next_id
+
+    @property
     def row_id(self) -> np.ndarray:
         """(N,) monotonically increasing global row ids (append order);
         ids survive :meth:`compact`."""

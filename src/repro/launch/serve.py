@@ -43,6 +43,22 @@ backpressure/quarantine counters and the degradation flag:
     PYTHONPATH=src python -m repro.launch.serve --daemon --faults \
         --nodes 6 --rounds 12
 
+``--daemon --modelplane`` additionally runs the model management
+plane over the stream: the run bootstraps the trained parameters as
+version 1, canaries + hot-promotes an identical candidate mid-stream
+(zero-downtime swap at a flush boundary), then force-promotes a
+NaN-poisoned candidate and lets the post-promote health watch roll it
+back automatically — promote/rollback instants land on the exported
+timeline. ``--registry PATH`` persists the version registry;
+``--modelplane-cmd {status,list,promote,rollback}`` (with
+``--registry``, plus ``--version N`` for promote) performs offline
+registry operations and exits:
+
+    PYTHONPATH=src python -m repro.launch.serve --daemon \
+        --modelplane --faults --nodes 3 --rounds 6
+    PYTHONPATH=src python -m repro.launch.serve \
+        --modelplane-cmd list --registry /tmp/perona-registry
+
 Every mode accepts ``--timeline PATH`` (export the run's span
 recording as Chrome trace-event JSON — open it in
 https://ui.perfetto.dev) and ``--metrics`` (periodic + final text
@@ -252,14 +268,19 @@ def serve_fleet(nodes: int = 16, rounds: int = 10,
 
 def serve_daemon(nodes: int = 6, rounds: int = 12,
                  runs_per_type: int = 1, seed: int = 0,
-                 faults: bool = False) -> dict:
+                 faults: bool = False, modelplane: bool = False,
+                 registry_dir: Optional[str] = None) -> dict:
     """Streaming ingestion loop: telemetry events through the bounded
     staging ring of an :class:`repro.fleet.IngestionDaemon`, optionally
     perturbed by the seeded fault injector (``faults=True`` also marks
-    one node genuinely degraded halfway through the run)."""
+    one node genuinely degraded halfway through the run). With
+    ``modelplane=True`` the run exercises the full model lifecycle on
+    the live stream: canary + hot-promote of an identical candidate,
+    then a forced promote of a NaN-poisoned candidate that the health
+    watch rolls back automatically."""
     from repro.fleet import (FaultPlan, FleetScoringService,
-                             IngestionDaemon, fleet_telemetry,
-                             inject_faults)
+                             IngestionDaemon, ModelPlane,
+                             fleet_telemetry, inject_faults)
 
     machines = {f"fleet-{i}": "e2-medium" for i in range(nodes)}
     _, frame, pre, model, params = _trained_perona(
@@ -271,6 +292,17 @@ def serve_daemon(nodes: int = 6, rounds: int = 12,
     daemon = IngestionDaemon(service, capacity_rows=64 * nodes,
                              flush_interval=0.5,
                              min_flush_gap=0.05)
+    plane = None
+    if modelplane:
+        if registry_dir is None:
+            import tempfile
+            registry_dir = tempfile.mkdtemp(prefix="perona-registry-")
+        # generous health shift: only the NaN candidate below should
+        # trip the watch, not the injected degraded node's drift
+        plane = ModelPlane(service, registry_dir, daemon=daemon,
+                           canary_flushes=1, watch_flushes=3,
+                           min_health_shift=0.5)
+        plane.bootstrap(params)
     degraded_node = f"fleet-{nodes - 1}"
     events = fleet_telemetry(
         machines, rounds=rounds, runs_per_type=runs_per_type,
@@ -282,12 +314,30 @@ def serve_daemon(nodes: int = 6, rounds: int = 12,
             seed=seed + 2, dropout=0.05, delay=0.2, duplicate=0.2,
             reorder=0.2, corrupt=0.15, burst=0.2, burst_window=3.0))
         fault_counts = log.counts()
-    daemon.run(events)
+    if plane is None:
+        daemon.run(events)
+    else:
+        third = max(len(events) // 3, 1)
+        daemon.run(events[:third], drain=False)
+        # identical params: divergence-free canary -> zero-downtime
+        # promote at a flush boundary mid-stream
+        plane.submit_candidate(params, source="cli-demo")
+        daemon.run(events[third:2 * third], drain=False)
+        bad = jax.tree_util.tree_map(
+            lambda x: np.asarray(x) * np.nan, params)
+        vid_bad = plane.registry.save_version(bad,
+                                              source="cli-demo-bad")
+        plane.promote(vid_bad, force=True)
+        daemon.run(events[2 * third:], drain=True)
     st = daemon.stats()
     return {"rounds": rounds, "stats": st,
             "faults": fault_counts,
             "degraded_node": degraded_node if faults else None,
             "flagged": daemon.flagged_nodes(),
+            "modelplane": None if plane is None else plane.status(),
+            "registry": registry_dir,
+            "versions": (None if plane is None
+                         else plane.registry.list_versions()),
             # the daemon's private virtual-clock tracer: --timeline
             # exports THIS recording in daemon mode, so flush spans
             # and ladder instants sit on the same clock as the
@@ -342,6 +392,19 @@ def main() -> None:
     ap.add_argument("--faults", action="store_true",
                     help="with --daemon: inject seeded stream faults "
                          "+ one genuinely degraded node")
+    ap.add_argument("--modelplane", action="store_true",
+                    help="with --daemon: run the model management "
+                         "plane demo (canary -> hot promote -> NaN "
+                         "candidate -> automatic rollback)")
+    ap.add_argument("--registry", metavar="PATH", default=None,
+                    help="model registry directory (persisted across "
+                         "runs; default: a temp dir)")
+    ap.add_argument("--modelplane-cmd", default=None,
+                    choices=["status", "list", "promote", "rollback"],
+                    help="offline registry operation (requires "
+                         "--registry) and exit")
+    ap.add_argument("--version", type=int, default=None,
+                    help="version id for --modelplane-cmd promote")
     ap.add_argument("--nodes", type=int, default=16,
                     help="fleet size for --fleet")
     ap.add_argument("--rounds", type=int, default=10)
@@ -370,9 +433,57 @@ def main() -> None:
         _export_timeline(args.timeline, tracer=tracer)
 
 
+def _modelplane_cmd(args) -> None:
+    """Offline registry operations: inspect or re-point the version
+    registry without a live service (a daemon started later against
+    the same ``--registry`` loads the incumbent this selects)."""
+    from repro.fleet import ModelRegistry
+
+    if args.registry is None:
+        raise SystemExit("--modelplane-cmd requires --registry PATH")
+    reg = ModelRegistry(args.registry)
+    cmd = args.modelplane_cmd
+    if cmd == "status":
+        print(f"[modelplane] incumbent=v{reg.incumbent} "
+              f"previous=v{reg.previous} "
+              f"versions={len(reg.list_versions())}")
+    elif cmd == "list":
+        for e in reg.list_versions():
+            v = e["verdict"]
+            line = (f"  v{e['version']:<3} {e['status']:<12} "
+                    f"source={e['source']}")
+            if e["tags"]:
+                line += f" tags={','.join(e['tags'])}"
+            if v is not None:
+                line += (" canary="
+                         + ("pass" if v["passed"] else
+                            "fail:" + ",".join(v["failed_checks"])))
+            print(line)
+    elif cmd == "promote":
+        if args.version is None:
+            raise SystemExit("promote requires --version N")
+        reg.set_incumbent(args.version)
+        print(f"[modelplane] incumbent=v{reg.incumbent} "
+              f"(previous=v{reg.previous})")
+    elif cmd == "rollback":
+        prev = reg.previous
+        if prev is None:
+            raise SystemExit("no previous version to roll back to")
+        cur = reg.incumbent
+        reg.set_incumbent(prev)
+        if cur is not None:
+            reg.set_status(cur, "rolled_back")
+        print(f"[modelplane] rolled back v{cur} -> incumbent "
+              f"v{reg.incumbent}")
+
+
 def _run(args) -> Optional[obs.Tracer]:
     """Dispatch one serving mode; returns the tracer whose recording
     ``--timeline`` should export (None -> the process-wide tracer)."""
+    if args.modelplane_cmd:
+        _modelplane_cmd(args)
+        return None
+
     if args.fingerprint:
         out = serve_fingerprints(args.rounds, seed=args.seed)
         print(f"[serve-fp] {out['rounds']} rounds, {out['scored']} "
@@ -383,7 +494,9 @@ def _run(args) -> Optional[obs.Tracer]:
 
     if args.daemon:
         out = serve_daemon(args.nodes, args.rounds, seed=args.seed,
-                           faults=args.faults)
+                           faults=args.faults,
+                           modelplane=args.modelplane,
+                           registry_dir=args.registry)
         st = out["stats"]
         svc = st["service"]
         req_s = st["events_seen"] / max(st["run_wall_s"], 1e-9)
@@ -406,6 +519,20 @@ def _run(args) -> Optional[obs.Tracer]:
             print(f"[serve-daemon] injected faults: {out['faults']}; "
                   f"degraded node {out['degraded_node']} -> "
                   f"flagged={out['flagged']}")
+        if out["modelplane"] is not None:
+            mp = out["modelplane"]
+            print(f"[modelplane] registry={out['registry']} "
+                  f"incumbent=v{mp['incumbent']} "
+                  f"phase={mp['phase']}; "
+                  f"promotions={mp['promotions']} "
+                  f"rollbacks={mp['rollbacks']} "
+                  f"canary={mp['canary_pass']}/"
+                  f"{mp['canary_pass'] + mp['canary_fail']} passed, "
+                  f"{mp['shadow_flushes']} shadow flushes, "
+                  f"{mp['repaired_rows']} rows repaired")
+            for e in out["versions"]:
+                print(f"[modelplane]   v{e['version']} "
+                      f"{e['status']} ({e['source']})")
         return out["tracer"]
 
     if args.fleet:

@@ -37,7 +37,8 @@ from repro.obs.metrics import (Counter, Gauge, Histogram,
                                disabled, enable, enabled, parse_key,
                                registry)
 from repro.obs.trace import (CAT_DEVICE, CAT_HOST, CAT_LADDER,
-                             SpanEvent, Tracer, span, tracer)
+                             CAT_PLANE, SpanEvent, Tracer, span,
+                             tracer)
 from repro.obs.timeline import (chrome_trace, validate_chrome_trace,
                                 validate_chrome_trace_file,
                                 write_chrome_trace)
@@ -47,7 +48,7 @@ __all__ = [
     "registry", "enable", "disable", "enabled", "disabled",
     "parse_key",
     "Tracer", "SpanEvent", "tracer", "span",
-    "CAT_HOST", "CAT_DEVICE", "CAT_LADDER",
+    "CAT_HOST", "CAT_DEVICE", "CAT_LADDER", "CAT_PLANE",
     "chrome_trace", "write_chrome_trace", "validate_chrome_trace",
     "validate_chrome_trace_file",
     "JitSite", "instance_site",

@@ -36,6 +36,7 @@ from repro.obs import metrics
 CAT_HOST = "host"
 CAT_DEVICE = "device"
 CAT_LADDER = "ladder"
+CAT_PLANE = "plane"  # model-plane lifecycle (canary/promote/rollback)
 
 #: Chrome trace-event phases used by the recorder.
 PH_COMPLETE = "X"

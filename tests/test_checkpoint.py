@@ -52,6 +52,55 @@ def test_restore_none_when_empty(tmp_path):
     assert restored is None and meta is None
 
 
+def test_async_write_error_raises_on_next_save(tmp_path, monkeypatch):
+    """A failed background write is not silently lost: the error
+    surfaces on the next save() (and only once), and the failed step
+    never becomes the restore point."""
+    mgr = CheckpointManager(tmp_path, async_save=True)
+    mgr.save(1, _state(1.0))
+    mgr.wait()
+
+    def boom(step, host, extra):
+        raise OSError("disk full")
+
+    monkeypatch.setattr(mgr, "_write", boom)
+    mgr.save(2, _state(2.0))  # queues; the worker hits the error
+    mgr._queue.join()
+    monkeypatch.undo()
+    with pytest.raises(OSError, match="disk full"):
+        mgr.save(3, _state(3.0))
+    assert mgr.latest_step() == 1  # step 2 never landed
+    mgr.save(3, _state(3.0))  # error consumed: saves work again
+    mgr.wait()
+    assert mgr.latest_step() == 3
+
+
+def test_async_write_error_raises_on_close(tmp_path, monkeypatch):
+    """close() drains the queue and re-raises a pending write error;
+    a second close is a clean no-op."""
+    mgr = CheckpointManager(tmp_path, async_save=True)
+
+    def boom(step, host, extra):
+        raise OSError("torn write")
+
+    monkeypatch.setattr(mgr, "_write", boom)
+    mgr.save(1, _state(1.0))
+    with pytest.raises(OSError, match="torn write"):
+        mgr.close()
+    mgr.close()  # idempotent once the error was consumed
+
+
+def test_pinned_steps_survive_gc(tmp_path):
+    mgr = CheckpointManager(tmp_path, keep_last=1, async_save=False)
+    mgr.save(1, _state(1.0))
+    mgr.pinned.add(1)
+    for s in (2, 3, 4):
+        mgr.save(s, _state(float(s)))
+    assert sorted(mgr.all_steps()) == [1, 4]
+    restored, _ = mgr.restore(_state(0.0), step=1)
+    assert float(np.asarray(restored["params"]["w"])[0, 0]) == 1.0
+
+
 def test_data_pipeline_deterministic_restart():
     """Exactly-once samples: batch_at(step) identical across 'restarts'."""
     p1 = TokenPipeline(vocab_size=128, seq_len=16, global_batch=4, seed=3)

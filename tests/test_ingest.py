@@ -347,6 +347,85 @@ def test_close_drains_staged_rows(setup):
         daemon.offer(events[0], now=0.0)
 
 
+# ------------------------------------------------------ scorer failures
+
+def test_transient_scorer_failure_retried_bit_identical(setup):
+    """A scorer dispatch that fails once is retried (bounded, seeded
+    backoff) and the run completes bit-identical to a clean one — the
+    stacked host buffers survive the failed attempt."""
+    ref = _service(setup)
+    events = fleet_telemetry(MACHINES, rounds=3, runs_per_type=1,
+                             seed=61, interval=1.0, jitter=0.01)
+    ref_daemon = IngestionDaemon(ref, capacity_rows=512,
+                                 flush_interval=0.5,
+                                 flush_rows=1 << 30,
+                                 service_time_scale=0.0)
+    ref_res = ref_daemon.run(events)
+
+    svc = _service(setup)
+    svc.retry_backoff_s = 0.0  # don't sleep in tests
+    real = svc.scorer.score_stack
+    calls = {"n": 0}
+
+    def flaky(params, stack):
+        calls["n"] += 1
+        if calls["n"] == 1:
+            raise RuntimeError("transient device loss")
+        return real(params, stack)
+
+    svc.scorer.score_stack = flaky
+    daemon = IngestionDaemon(svc, capacity_rows=512,
+                             flush_interval=0.5, flush_rows=1 << 30,
+                             service_time_scale=0.0)
+    res = daemon.run(events)
+    st = daemon.stats()
+    assert svc.stats["scorer_retries"] == 1
+    assert st["scorer_retries"] == 1
+    assert st["flush_failures"] == 0
+    assert sorted(res) == sorted(ref_res)
+    for n in ref_res:
+        for got, want in zip(res[n], ref_res[n]):
+            np.testing.assert_array_equal(got.anomaly_prob,
+                                          want.anomaly_prob)
+            np.testing.assert_array_equal(got.codes, want.codes)
+    np.testing.assert_array_equal(svc.store.anomaly,
+                                  ref.store.anomaly)
+
+
+def test_terminal_scorer_failure_degrades_not_dies(setup):
+    """When retries are exhausted the flush loses its scores, not the
+    pipeline: the daemon keeps consuming the stream, rows stay durable
+    (unscored) in the store, and the failure is counted + traced."""
+    frame, *_ = setup
+    svc = _service(setup)
+    svc.dispatch_retries = 1
+    svc.retry_backoff_s = 0.0
+
+    def dead(params, stack):
+        raise RuntimeError("device gone")
+
+    svc.scorer.score_stack = dead
+    events = fleet_telemetry(MACHINES, rounds=2, runs_per_type=1,
+                             seed=62, interval=1.0, jitter=0.01)
+    daemon = IngestionDaemon(svc, capacity_rows=512,
+                             flush_interval=0.5, flush_rows=1 << 30,
+                             service_time_scale=0.0)
+    res = daemon.run(events)  # must not raise
+    st = daemon.stats()
+    assert res == {}
+    assert st["flush_failures"] >= 1
+    # one retry per failed flush: the first bucket's dispatch burns
+    # its single retry, then the raise aborts the flush
+    assert svc.stats["scorer_retries"] == st["flush_failures"]
+    # every streamed row landed in the store, unscored
+    assert len(svc.store) == len(frame) + sum(
+        len(e.frame) for e in events)
+    assert np.isnan(svc.store.anomaly[len(frame):]).all()
+    names = [e.name for e in daemon.tracer.events()]
+    assert "ingest.flush_failed" in names
+    assert not daemon.degraded  # failure != backpressure degradation
+
+
 # --------------------------------------------------------- threaded mode
 
 def test_threaded_serve_smoke(setup):

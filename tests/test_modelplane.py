@@ -1,0 +1,293 @@
+"""Model management plane: registry durability + pinning, zero-downtime
+hot-swap parity (identical candidate promoted mid-stream scores bit for
+bit like a run that never swapped), automatic rollback + store repair
+for a NaN-poisoned forced promote, canary rejection of a divergent
+candidate, and the drift-triggered retrain -> canary -> promote loop."""
+
+import os
+
+import jax
+import numpy as np
+import pytest
+
+from repro.core.graph_data import build_graphs
+from repro.core.model import PeronaConfig, PeronaModel
+from repro.core.preprocess import Preprocessor
+from repro.fingerprint.runner import SuiteRunner
+from repro.fleet import (FleetScoringService, IngestionDaemon,
+                         ModelPlane, ModelRegistry, fleet_telemetry)
+
+DAY = 86400.0
+MACHINES = {"mp-0": "e2-medium", "mp-1": "n2-standard-4",
+            "mp-2": "e2-medium"}
+
+
+@pytest.fixture(scope="module")
+def setup():
+    runner = SuiteRunner(seed=5)
+    frame = runner.run_frame(MACHINES, runs_per_type=10,
+                             stress_fraction=0.2)
+    pre = Preprocessor().fit(frame)
+    batch = build_graphs(frame, pre)
+    cfg = PeronaConfig(feature_dim=pre.feature_dim,
+                       edge_dim=batch.edge.shape[-1])
+    model = PeronaModel(cfg)
+    params = model.init(jax.random.PRNGKey(0))  # untrained: scoring only
+    return frame, pre, model, params
+
+
+def _service(setup):
+    frame, pre, model, params = setup
+    svc = FleetScoringService(model, params, pre, sharded=False)
+    svc.seed_history(frame)
+    return svc
+
+
+def _daemon(svc):
+    return IngestionDaemon(svc, capacity_rows=512, flush_interval=0.5,
+                           flush_rows=1 << 30, service_time_scale=0.0)
+
+
+def _events(rounds, seed=7):
+    return fleet_telemetry(MACHINES, rounds=rounds, runs_per_type=1,
+                           seed=seed, interval=1.0, jitter=0.01)
+
+
+def _plane(svc, daemon, tmp_path, **kw):
+    kw.setdefault("canary_flushes", 1)
+    kw.setdefault("watch_flushes", 2)
+    kw.setdefault("min_health_shift", 1.0)  # only NaN should trip
+    kw.setdefault("latency_budget", 100.0)  # not a wall-clock test
+    return ModelPlane(svc, tmp_path / "registry", daemon=daemon, **kw)
+
+
+def _assert_results_equal(got, want):
+    assert sorted(got) == sorted(want)
+    for n in want:
+        assert len(got[n]) == len(want[n])
+        for g, w in zip(got[n], want[n]):
+            np.testing.assert_array_equal(g.anomaly_prob,
+                                          w.anomaly_prob)
+            np.testing.assert_array_equal(g.codes, w.codes)
+            np.testing.assert_array_equal(g.type_logits, w.type_logits)
+            np.testing.assert_array_equal(g.row_ids, w.row_ids)
+
+
+# ------------------------------------------------------------- registry
+
+def test_registry_roundtrip_and_crash_safety(tmp_path, monkeypatch):
+    """Versions round-trip through a process restart; a crash while
+    rewriting the index leaves the previous registry.json intact."""
+    params = {"w": np.arange(6, dtype=np.float32).reshape(2, 3),
+              "b": np.zeros(3, np.float32)}
+    reg = ModelRegistry(tmp_path / "reg")
+    v1 = reg.save_version(params, source="boot")
+    reg.set_incumbent(v1)
+    v2 = reg.save_version({"w": params["w"] * 2, "b": params["b"]},
+                          source="retrain")
+    reg.record_verdict(v2, {"passed": False,
+                            "failed_checks": ["divergence"]})
+    reg.tag(v1, "golden")
+
+    reg2 = ModelRegistry(tmp_path / "reg")  # reload from disk
+    assert reg2.incumbent == v1
+    assert [e["version"] for e in reg2.list_versions()] == [v1, v2]
+    assert reg2.entry(v1)["tags"] == ["golden"]
+    assert reg2.entry(v2)["verdict"]["failed_checks"] == ["divergence"]
+    got = reg2.load_version(params, v2)
+    np.testing.assert_array_equal(np.asarray(got["w"]),
+                                  params["w"] * 2)
+
+    # crash mid-rewrite: the checkpoint lands but the index swap fails
+    before = reg2.list_versions()
+    real_replace = os.replace
+
+    def boom(src, dst, *a, **k):
+        if str(dst).endswith("registry.json"):
+            raise OSError("disk full")
+        return real_replace(src, dst, *a, **k)
+
+    monkeypatch.setattr("repro.fleet.modelplane.os.replace", boom)
+    with pytest.raises(OSError):
+        reg2.save_version(params, source="crash")
+    monkeypatch.setattr("repro.fleet.modelplane.os.replace",
+                        real_replace)
+    reg3 = ModelRegistry(tmp_path / "reg")
+    assert reg3.list_versions() == before
+    assert reg3.incumbent == v1
+
+
+def test_registry_pins_incumbent_against_gc(tmp_path):
+    """keep-last GC never evicts the incumbent (or its predecessor),
+    however many newer candidates pile up."""
+    params = {"w": np.ones(4, np.float32)}
+    reg = ModelRegistry(tmp_path / "reg", keep_last=1)
+    v1 = reg.save_version(params, source="boot")
+    reg.set_incumbent(v1)
+    for k in range(3):
+        last = reg.save_version({"w": params["w"] + k}, source="cand")
+    got = reg.load_version(params, v1)  # pinned -> still on disk
+    np.testing.assert_array_equal(np.asarray(got["w"]), params["w"])
+    reg.load_version(params, last)  # newest unpinned survives
+    with pytest.raises(FileNotFoundError):
+        reg.load_version(params, last - 1)  # older candidate GC'd
+
+
+# ------------------------------------------------------ hot-swap parity
+
+def test_hot_swap_identical_candidate_is_invisible(setup, tmp_path):
+    """An identical-parameters candidate canaried and promoted
+    mid-stream changes nothing: every result and stored score is bit
+    for bit equal to a run that never swapped, no event is dropped or
+    double-scored, and the swap compiles nothing on the hot path."""
+    frame, pre, model, params = setup
+    rounds = 4
+
+    ref_svc = _service(setup)
+    ref_res = _daemon(ref_svc).run(_events(rounds))
+
+    svc = _service(setup)
+    daemon = _daemon(svc)
+    plane = _plane(svc, daemon, tmp_path)
+    plane.bootstrap(params)
+    events = _events(rounds)
+    k = len(events) // 2
+    daemon.run(events[:k], drain=False)
+    vid = plane.submit_candidate(params, source="test")
+    res = daemon.run(events[k:], drain=True)
+
+    _assert_results_equal(res, ref_res)
+    np.testing.assert_array_equal(svc.store.anomaly,
+                                  ref_svc.store.anomaly)
+    assert len(svc.store) == len(ref_svc.store)
+    st, ref_st = daemon.stats(), None
+    assert st["events_seen"] == rounds * len(MACHINES)
+    assert st["rows_staged_total"] == svc.stats["rows_scored"]
+    assert svc.stats["rows_scored"] == ref_svc.stats["rows_scored"]
+    # promoted exactly once, shadow-scored without touching the store,
+    # and the candidate's programs were warm before the swap
+    assert svc.stats["param_swaps"] == 1
+    assert svc.stats["shadow_dispatches"] > 0
+    assert svc.stats["warm_dispatches"] > 0
+    assert svc.trace_count == ref_svc.trace_count  # zero new compiles
+    assert plane.status()["promotions"] == 1
+    assert plane.status()["rollbacks"] == 0
+    assert plane.registry.incumbent == vid
+    assert plane.registry.entry(vid)["verdict"]["passed"]
+
+
+# -------------------------------------------------- automatic rollback
+
+def test_nan_candidate_rolls_back_and_repairs(setup, tmp_path):
+    """A NaN-producing candidate forced past the canary gate is rolled
+    back by the health watch within bounded flushes; the store and the
+    in-flight results end bit-identical to a run that never promoted,
+    and the promote/rollback sequence is visible as tracer instants."""
+    frame, pre, model, params = setup
+    rounds = 4
+
+    ref_svc = _service(setup)
+    ref_res = _daemon(ref_svc).run(_events(rounds))
+
+    svc = _service(setup)
+    daemon = _daemon(svc)
+    plane = _plane(svc, daemon, tmp_path, watch_flushes=3)
+    v1 = plane.bootstrap(params)
+    events = _events(rounds)
+    k = len(events) // 2
+    daemon.run(events[:k], drain=False)
+    bad = jax.tree_util.tree_map(lambda x: np.asarray(x) * np.nan,
+                                 params)
+    vid = plane.registry.save_version(bad, source="bad")
+    plane.promote(vid, force=True)
+    res = daemon.run(events[k:], drain=True)
+
+    st = plane.status()
+    assert st["rollbacks"] == 1
+    assert st["phase"] == "steady"
+    assert st["repaired_rows"] > 0
+    assert plane.registry.incumbent == v1
+    assert plane.registry.entry(vid)["status"] == "rolled_back"
+
+    # store + every returned result repaired to incumbent outputs
+    _assert_results_equal(res, ref_res)
+    np.testing.assert_array_equal(svc.store.anomaly,
+                                  ref_svc.store.anomaly)
+    # every row the reference run scored is finite here too — no NaN
+    # leaked from the bad candidate (seeded history stays unscored)
+    scored = np.isfinite(ref_svc.store.anomaly)
+    assert np.isfinite(svc.store.anomaly[scored]).all()
+
+    names = [e.name for e in daemon.tracer.events()]
+    i_p = names.index("modelplane.promote")
+    i_r = names.index("modelplane.rollback")
+    assert i_p < i_r
+    rb = daemon.tracer.events()[i_r]
+    assert rb.args["reason"] == "nonfinite"
+    assert rb.args["after_flushes"] <= 3
+
+
+# ------------------------------------------------------------- canary
+
+def test_canary_rejects_divergent_candidate(setup, tmp_path):
+    """A candidate whose scores diverge past the budget never touches
+    the live parameters; the verdict (with the failed checks) lands in
+    the registry."""
+    frame, pre, model, params = setup
+    svc = _service(setup)
+    daemon = _daemon(svc)
+    plane = _plane(svc, daemon, tmp_path, canary_flushes=2)
+    plane.bootstrap(params)
+    events = _events(4)
+    k = len(events) // 3
+    daemon.run(events[:k], drain=False)
+    divergent = jax.tree_util.tree_map(
+        lambda x: np.asarray(x) * 10.0, params)
+    vid = plane.submit_candidate(divergent, source="divergent")
+    daemon.run(events[k:], drain=True)
+
+    st = plane.status()
+    assert st["canary_fail"] == 1
+    assert st["promotions"] == 0
+    assert svc.stats["param_swaps"] == 0
+    entry = plane.registry.entry(vid)
+    assert entry["status"] == "rejected"
+    assert entry["verdict"]["passed"] is False
+    assert "divergence" in entry["verdict"]["failed_checks"]
+    assert entry["verdict"]["divergence_max"] > plane.divergence_budget
+    names = [e.name for e in daemon.tracer.events()]
+    assert "modelplane.canary_fail" in names
+    assert "modelplane.promote" not in names
+
+
+# ------------------------------------------------- drift retrain loop
+
+def test_drift_triggers_retrain_canary_promote(setup, tmp_path):
+    """Sustained degradation (threshold forced to zero) fires exactly
+    one retrain episode; the retrained candidate flows through canary
+    and is promoted with source attribution."""
+    frame, pre, model, params = setup
+    svc = _service(setup)
+    daemon = _daemon(svc)
+    retrained = []
+
+    def retrain(service):
+        retrained.append(len(service.store))
+        return params  # identical params: canary must pass
+
+    plane = _plane(svc, daemon, tmp_path, watch_flushes=1,
+                   drift_flag_flushes=2, drift_ewma_threshold=0.0,
+                   drift_min_scored=1, retrain_fn=retrain)
+    plane.bootstrap(params)
+    daemon.run(_events(4))
+
+    st = plane.status()
+    assert len(retrained) == 1
+    assert st["retrains"] == 1
+    assert st["promotions"] >= 1
+    sources = {e["source"]: e for e in plane.registry.list_versions()}
+    assert "drift-retrain" in sources
+    assert sources["drift-retrain"]["status"] == "incumbent"
+    assert sources["drift-retrain"]["extra"]["nodes"]
+    names = [e.name for e in daemon.tracer.events()]
+    assert "modelplane.retrain" in names
